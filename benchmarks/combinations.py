@@ -1,0 +1,63 @@
+"""Table 1 analogue: the swept parameter space + the paper's combination
+count formula vs the exact enumeration, and sweep-cost scaling (the
+"resources ComPar requires" discussion in §5/6)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import csv_row
+from repro.configs import get_arch, get_shape
+from repro.core import ComParTuner
+from repro.core.combinator import (DEFAULT_CLAUSE_SPACE,
+                                   DEFAULT_GLOBAL_SPACE, clause_grid,
+                                   enumerate_combinations,
+                                   paper_combination_count)
+from repro.core.providers import all_providers
+
+
+def run(fast: bool = False) -> List[str]:
+    rows = []
+    provs = all_providers()
+    for name, p in sorted(provs.items()):
+        rows.append(csv_row(f"combinations/provider/{name}", 0.0,
+                            f"flags={len(p.flags)}:"
+                            + "+".join(sorted(p.flags))))
+    n_clauses = len(clause_grid(DEFAULT_CLAUSE_SPACE))
+    rows.append(csv_row("combinations/clause_grid", 0.0,
+                        f"size={n_clauses}"))
+    exact = len(enumerate_combinations(sorted(provs)))
+    formula = paper_combination_count(
+        [len(p.flags) for p in provs.values()],
+        n_rtl=len(DEFAULT_GLOBAL_SPACE), n_d=len(DEFAULT_CLAUSE_SPACE))
+    rows.append(csv_row("combinations/exact_enumeration", 0.0,
+                        f"count={exact}"))
+    rows.append(csv_row("combinations/paper_formula_upper_bound", 0.0,
+                        f"count={formula}"))
+
+    # sweep-cost scaling: combinations vs wall time (dry-run executor)
+    cfg = get_arch("stablelm-3b").smoke()
+    shape = get_shape("train_4k").smoke()
+    budgets = (2, 4) if fast else (2, 4, 8)
+    for budget in budgets:
+        t0 = time.time()
+        tuner = ComParTuner(cfg, shape, mesh=None, executor="dryrun",
+                            project=f"scaling-{budget}", timeout_s=120)
+        space = {"remat": ("none", "dots", "full"),
+                 "kernel": ("xla",), "block_q": (16, 32),
+                 "block_k": (16,), "scan_unroll": (1,),
+                 "mlstm_chunk": (16,)}
+        plan, rep = tuner.sweep(providers=["tensor_par", "fsdp"],
+                                clause_space=space, budget=budget,
+                                max_flags=0)
+        dt = time.time() - t0
+        rows.append(csv_row(f"combinations/sweep_cost/budget{budget}",
+                            dt * 1e6 / max(rep.n_done, 1),
+                            f"combos={rep.n_combinations};"
+                            f"elapsed_s={dt:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,27 @@
+"""Shared benchmark helpers: wall-clock timing of jitted programs."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import numpy as np
+
+
+def time_jitted(fn: Callable, args, *, repeats: int = 3,
+                warmup: int = 1) -> float:
+    """Median wall-clock seconds of fn(*args) (pre-compiled via first call)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

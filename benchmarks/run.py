@@ -1,0 +1,51 @@
+"""Benchmark entrypoint: one suite per paper table/figure.
+
+  combinations  — Table 1 analogue (swept space + count formula + cost)
+  suite_lm      — Fig. 2/3 analogue (provider vs ComPar fusion, wall-clock)
+  suite_kernels — Fig. 4/5 analogue (kernel-level comparisons)
+  roofline      — EXPERIMENTS §Roofline rows (from the dry-run JSON)
+
+Prints ``name,us_per_call,derived`` CSV.  ``--fast`` trims the slow rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import combinations, roofline, suite_kernels, suite_lm
+    suites = {
+        "combinations": combinations.run,
+        "suite_kernels": suite_kernels.run,
+        "suite_lm": suite_lm.run,
+        "roofline": roofline.run,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = {k: v for k, v in suites.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    failed = False
+    for name, fn in suites.items():
+        try:
+            for row in fn(fast=args.fast):
+                print(row)
+                sys.stdout.flush()
+        except Exception as e:
+            failed = True
+            print(f"{name},0.0,SUITE_ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.configs.base import (  # noqa: F401
+    ArchConfig, ShapeConfig, ScanGroup, SHAPES,
+    TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K, shape_applies,
+)
+from repro.configs.registry import ARCHS, get_arch, get_shape, all_cells  # noqa: F401

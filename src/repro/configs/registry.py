@@ -1,0 +1,43 @@
+"""Architecture registry: ``--arch <id>`` lookup."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, shape_applies
+
+from repro.configs.xlstm_125m import CONFIG as _xlstm
+from repro.configs.stablelm_3b import CONFIG as _stablelm
+from repro.configs.granite_8b import CONFIG as _granite
+from repro.configs.chatglm3_6b import CONFIG as _chatglm
+from repro.configs.starcoder2_3b import CONFIG as _starcoder
+from repro.configs.phi3_vision_4_2b import CONFIG as _phi3v
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as _qwen3
+from repro.configs.kimi_k2_1t_a32b import CONFIG as _kimi
+from repro.configs.recurrentgemma_2b import CONFIG as _rg
+from repro.configs.musicgen_large import CONFIG as _musicgen
+
+ARCHS = {c.name: c for c in (
+    _xlstm, _stablelm, _granite, _chatglm, _starcoder,
+    _phi3v, _qwen3, _kimi, _rg, _musicgen,
+)}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name.endswith("-smoke"):
+        return get_arch(name[: -len("-smoke")]).smoke()
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name.endswith("-smoke"):
+        return get_shape(name[: -len("-smoke")]).smoke()
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; have {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def all_cells():
+    """All 40 (arch x shape) cells, with applicability flag."""
+    for a in ARCHS.values():
+        for s in SHAPES.values():
+            yield a, s, shape_applies(a, s)

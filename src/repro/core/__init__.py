@@ -1,0 +1,12 @@
+"""ComParX core: the paper's contribution (segmentation + multi-provider
+hyper-parameter sweep + DB + fusion + black-box validation)."""
+from repro.core.combinator import (  # noqa: F401
+    Combination, GlobalKnobs, enumerate_combinations,
+    paper_combination_count,
+)
+from repro.core.cost_model import CostTerms, Hardware, V5E  # noqa: F401
+from repro.core.db import SweepDB  # noqa: F401
+from repro.core.fusion import best_uniform, fuse  # noqa: F401
+from repro.core.plan import Plan, build_contexts, uniform_plan  # noqa: F401
+from repro.core.segment import Segment, fragment  # noqa: F401
+from repro.core.tuner import ComParTuner, SweepReport  # noqa: F401

@@ -1,0 +1,162 @@
+"""Combinator: enumerate (provider x flag-subset x clause) combinations.
+
+Mirrors ComPar's Combinator, which parses three JSON inputs (compilers+
+flags, OpenMP directive clauses, RTL routines) and registers every
+permutation in the DB.  The paper's combination-count formula
+
+    sum_{i in C} (2^{n_i} - 1) * (2^{rtl + d} - 1)
+
+is implemented verbatim (it is an upper bound: it counts clause *subsets*;
+mutually exclusive clause values make the realizable set smaller — we also
+report the exact enumerated count).
+"""
+from __future__ import annotations
+
+import hashlib
+import itertools
+import json
+import random
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+from repro.models.context import SegmentClause
+
+#: default "directive clause" sweep space (the OpenMP schedule/chunk analogue)
+DEFAULT_CLAUSE_SPACE: Dict[str, Tuple] = {
+    "remat": ("none", "dots", "full"),
+    "kernel": ("xla", "pallas"),
+    "block_q": (256, 512),
+    "block_k": (512, 1024),
+    "scan_unroll": (1,),
+    "mlstm_chunk": (256,),
+    "moe_dispatch": ("sorted",),
+    "cache_upcast": (True,),
+    "decode_shardmap": (False,),
+}
+
+#: default "RTL routine" sweep space (global runtime knobs,
+#: the omp_set_num_threads analogue)
+DEFAULT_GLOBAL_SPACE: Dict[str, Tuple] = {
+    "microbatches": (1, 2, 4),
+    "donate": (True,),
+    "opt_state_dtype": ("float32", "bfloat16"),
+}
+
+
+@dataclass(frozen=True)
+class Combination:
+    """One point of the per-segment sweep."""
+    provider: str
+    flags: FrozenSet[str]
+    clause: SegmentClause
+
+    @property
+    def cid(self) -> str:
+        blob = json.dumps(
+            {"p": self.provider, "f": sorted(self.flags),
+             "c": self.clause.key()}, sort_keys=True)
+        return hashlib.sha1(blob.encode()).hexdigest()[:12]
+
+    def label(self) -> str:
+        fl = "+".join(sorted(self.flags)) or "-"
+        return f"{self.provider}[{fl}]({self.clause.key()})"
+
+    def to_json(self) -> Dict:
+        return {"provider": self.provider, "flags": sorted(self.flags),
+                "clause": vars(self.clause)}
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "Combination":
+        return cls(d["provider"], frozenset(d["flags"]),
+                   SegmentClause(**d["clause"]))
+
+
+@dataclass(frozen=True)
+class GlobalKnobs:
+    """Program-wide knobs (ComPar's RTL-routine analogue)."""
+    microbatches: int = 1
+    donate: bool = True
+    opt_state_dtype: str = "float32"
+
+    def key(self) -> str:
+        return f"mb={self.microbatches},don={self.donate},osd={self.opt_state_dtype}"
+
+
+def paper_combination_count(flags_per_provider: Sequence[int],
+                            n_rtl: int, n_d: int) -> int:
+    """The paper's formula: sum_i (2^{n_i}-1)(2^{rtl+d}-1)."""
+    return sum((2 ** n - 1) * (2 ** (n_rtl + n_d) - 1)
+               for n in flags_per_provider)
+
+
+def flag_subsets(flags: Sequence[str], max_flags: Optional[int] = None):
+    """All subsets of a provider's flags (including empty = bare provider)."""
+    out = [frozenset()]
+    upper = len(flags) if max_flags is None else min(max_flags, len(flags))
+    for r in range(1, upper + 1):
+        out.extend(frozenset(c) for c in itertools.combinations(flags, r))
+    return out
+
+
+def clause_grid(space: Dict[str, Tuple]) -> List[SegmentClause]:
+    keys = sorted(space)
+    out = []
+    for combo in itertools.product(*(space[k] for k in keys)):
+        out.append(SegmentClause(**dict(zip(keys, combo))))
+    return out
+
+
+def enumerate_combinations(
+        providers: Sequence[str],
+        clause_space: Optional[Dict[str, Tuple]] = None,
+        *,
+        max_flags: Optional[int] = None,
+        budget: Optional[int] = None,
+        seed: int = 0) -> List[Combination]:
+    """Full cartesian enumeration, optionally budget-sampled.
+
+    ``budget`` caps the number of combinations (uniform sample with a fixed
+    seed — ComPar's recommendation to sweep a "sweet-spot" input applies to
+    the sweep size too).
+    """
+    from repro.core.providers import get_provider
+    space = clause_space or DEFAULT_CLAUSE_SPACE
+    clauses = clause_grid(space)
+    out: List[Combination] = []
+    for pname in providers:
+        p = get_provider(pname)
+        for fl in flag_subsets(sorted(p.flags), max_flags):
+            for cl in clauses:
+                out.append(Combination(pname, fl, cl))
+    if budget is not None and len(out) > budget:
+        rng = random.Random(seed)
+        out = rng.sample(out, budget)
+    return out
+
+
+def global_grid(space: Optional[Dict[str, Tuple]] = None) -> List[GlobalKnobs]:
+    space = space or DEFAULT_GLOBAL_SPACE
+    keys = sorted(space)
+    return [GlobalKnobs(**dict(zip(keys, combo)))
+            for combo in itertools.product(*(space[k] for k in keys))]
+
+
+def load_sweep_json(path: str):
+    """ComPar-style JSON sweep input.
+
+    {
+      "providers": {"tensor_par": ["shard_vocab"], "fsdp": []},
+      "clauses":   {"remat": ["none","dots"], "kernel": ["xla"]},
+      "globals":   {"microbatches": [1,2]}
+    }
+    """
+    with open(path) as f:
+        spec = json.load(f)
+    providers = list(spec.get("providers", {}))
+    clause_space = {k: tuple(v) for k, v in spec.get("clauses", {}).items()}
+    for k, v in DEFAULT_CLAUSE_SPACE.items():
+        clause_space.setdefault(k, (v[0],))
+    global_space = {k: tuple(v) for k, v in spec.get("globals", {}).items()}
+    for k, v in DEFAULT_GLOBAL_SPACE.items():
+        global_space.setdefault(k, (v[0],))
+    return providers, clause_space, global_space

@@ -1,0 +1,129 @@
+"""Three-term roofline cost model (TPU v5e target).
+
+    compute_s    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory_s     = HLO_bytes / (chips * HBM_bw)
+    collective_s = collective_bytes_per_chip / link_bw
+
+The Executor scores every ComParX combination with these terms; the
+Optimal Plan Generator minimizes ``step_time = max(compute, memory,
+collective)`` (the terms overlap on real hardware; max is the standard
+roofline composition) plus fusion boundary costs.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    link_bw: float = 50e9               # bytes/s per ICI link
+    hbm_bytes: float = 16e9             # HBM capacity per chip
+    dcn_bw: float = 25e9                # bytes/s per host, pod-to-pod
+
+
+V5E = Hardware()
+
+
+@dataclass
+class CostTerms:
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    bytes_per_device: float = 0.0       # peak memory from memory_analysis
+    detail: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"compute_s": self.compute_s, "memory_s": self.memory_s,
+                "collective_s": self.collective_s, "flops": self.flops,
+                "bytes_accessed": self.bytes_accessed,
+                "collective_bytes": self.collective_bytes,
+                "bytes_per_device": self.bytes_per_device,
+                "total_s": self.total_s}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, float]) -> "CostTerms":
+        return cls(compute_s=d.get("compute_s", 0.0),
+                   memory_s=d.get("memory_s", 0.0),
+                   collective_s=d.get("collective_s", 0.0),
+                   flops=d.get("flops", 0.0),
+                   bytes_accessed=d.get("bytes_accessed", 0.0),
+                   collective_bytes=d.get("collective_bytes", 0.0),
+                   bytes_per_device=d.get("bytes_per_device", 0.0))
+
+
+def terms_from_analysis(flops: float, bytes_accessed: float,
+                        coll_bytes_per_chip: float, n_chips: int,
+                        hw: Hardware = V5E,
+                        bytes_per_device: float = 0.0) -> CostTerms:
+    """cost_analysis() totals are whole-program; divide by chip count."""
+    return CostTerms(
+        compute_s=flops / (n_chips * hw.peak_flops),
+        memory_s=bytes_accessed / (n_chips * hw.hbm_bw),
+        collective_s=coll_bytes_per_chip / hw.link_bw,
+        flops=flops, bytes_accessed=bytes_accessed,
+        collective_bytes=coll_bytes_per_chip,
+        bytes_per_device=bytes_per_device)
+
+
+# --- analytic MODEL_FLOPS (the "useful compute" yardstick) -------------------
+
+def active_params(cfg: ArchConfig) -> int:
+    """Parameters touched per token (MoE: top-k experts only)."""
+    from repro.models.model import model_specs
+    from repro.models.params import param_count
+    total = param_count(model_specs(cfg))
+    if not cfg.is_moe:
+        return total
+    # subtract the inactive expert fraction
+    from repro.models.moe import moe_specs
+    from repro.models.params import param_count as pc
+    expert_leaf = moe_specs(cfg)
+    per_layer_expert = sum(
+        math.prod(s.shape) for k, s in expert_leaf.items()
+        if k in ("wi", "wg", "wo"))
+    n_moe_layers = cfg.num_layers - cfg.first_k_dense
+    inactive_frac = 1.0 - cfg.experts_per_token / cfg.num_experts
+    return int(total - n_moe_layers * per_layer_expert * inactive_frac)
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """6*N*D for training, 2*N*D for inference forward (N = active params).
+
+    For decode shapes D = global_batch tokens (one step).
+    """
+    n = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    tokens = shape.global_batch                     # decode: one token each
+    flops = 2.0 * n * tokens
+    # attention reads of the KV cache dominate decode compute for dense archs
+    kinds = cfg.block_kinds()
+    n_attn = sum(1 for k in kinds if k.startswith("attn"))
+    ctx_len = min(shape.seq_len, cfg.window_size) if cfg.window_size \
+        else shape.seq_len
+    flops += 4.0 * tokens * n_attn * cfg.num_heads * cfg.head_dim_ * ctx_len
+    return flops

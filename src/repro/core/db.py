@@ -1,0 +1,133 @@
+"""Sweep DB: sqlite-backed combination/result store with ComPar's three
+operational modes — **New**, **Overwrite**, **Continue**.
+
+Continue mode is the sweep's fault tolerance: a crashed or preempted sweep
+resumes without re-running finished combinations (paper §4.2), and it is
+also how more combinations are appended to an existing project.
+"""
+from __future__ import annotations
+
+import json
+import sqlite3
+import time
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.core.combinator import Combination
+
+_SCHEMA = """
+CREATE TABLE IF NOT EXISTS projects (
+    name TEXT PRIMARY KEY,
+    created REAL,
+    config TEXT
+);
+CREATE TABLE IF NOT EXISTS combinations (
+    project TEXT,
+    segment TEXT,
+    cid TEXT,
+    spec TEXT,
+    status TEXT DEFAULT 'pending',   -- pending | done | failed | invalid
+    cost TEXT,
+    error TEXT,
+    updated REAL,
+    PRIMARY KEY (project, segment, cid)
+);
+"""
+
+
+class SweepDB:
+    def __init__(self, path: str = ":memory:"):
+        self.conn = sqlite3.connect(path)
+        self.conn.executescript(_SCHEMA)
+        self.conn.commit()
+
+    # --- project modes -----------------------------------------------------
+    def open_project(self, name: str, mode: str = "new",
+                     config: Optional[Dict] = None) -> str:
+        """Returns the (possibly suffixed) project name actually used."""
+        cur = self.conn.execute(
+            "SELECT name FROM projects WHERE name=?", (name,))
+        exists = cur.fetchone() is not None
+        if mode == "new":
+            final = name
+            i = 1
+            while self._exists(final):
+                final = f"{name}_{i}"       # append incremental index
+                i += 1
+        elif mode == "overwrite":
+            final = name
+            if exists:
+                self.conn.execute(
+                    "DELETE FROM combinations WHERE project=?", (name,))
+                self.conn.execute(
+                    "DELETE FROM projects WHERE name=?", (name,))
+        elif mode == "continue":
+            final = name
+            if exists:
+                self.conn.commit()
+                return final
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+        self.conn.execute(
+            "INSERT INTO projects VALUES (?,?,?)",
+            (final, time.time(), json.dumps(config or {})))
+        self.conn.commit()
+        return final
+
+    def _exists(self, name: str) -> bool:
+        cur = self.conn.execute(
+            "SELECT 1 FROM projects WHERE name=?", (name,))
+        return cur.fetchone() is not None
+
+    # --- combinations ------------------------------------------------------
+    def register(self, project: str, segment: str, combo: Combination):
+        self.conn.execute(
+            "INSERT OR IGNORE INTO combinations "
+            "(project, segment, cid, spec, updated) VALUES (?,?,?,?,?)",
+            (project, segment, combo.cid, json.dumps(combo.to_json()),
+             time.time()))
+        self.conn.commit()
+
+    def status(self, project: str, segment: str, cid: str) -> Optional[str]:
+        cur = self.conn.execute(
+            "SELECT status FROM combinations WHERE project=? AND segment=? "
+            "AND cid=?", (project, segment, cid))
+        row = cur.fetchone()
+        return row[0] if row else None
+
+    def record(self, project: str, segment: str, cid: str, *,
+               status: str, cost: Optional[Dict] = None,
+               error: str = ""):
+        self.conn.execute(
+            "UPDATE combinations SET status=?, cost=?, error=?, updated=? "
+            "WHERE project=? AND segment=? AND cid=?",
+            (status, json.dumps(cost or {}), error, time.time(),
+             project, segment, cid))
+        self.conn.commit()
+
+    def results(self, project: str,
+                segment: Optional[str] = None) -> List[Dict]:
+        q = ("SELECT segment, cid, spec, status, cost, error "
+             "FROM combinations WHERE project=?")
+        args: Tuple = (project,)
+        if segment is not None:
+            q += " AND segment=?"
+            args = (project, segment)
+        out = []
+        for seg, cid, spec, status, cost, error in self.conn.execute(q, args):
+            out.append({"segment": seg, "cid": cid,
+                        "combo": Combination.from_json(json.loads(spec)),
+                        "status": status,
+                        "cost": json.loads(cost) if cost else None,
+                        "error": error})
+        return out
+
+    def pending(self, project: str) -> List[Dict]:
+        return [r for r in self.results(project) if r["status"] == "pending"]
+
+    def done_count(self, project: str) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for st, n in self.conn.execute(
+                "SELECT status, COUNT(*) FROM combinations WHERE project=? "
+                "GROUP BY status", (project,)):
+            out[st] = n
+        return out

@@ -1,0 +1,176 @@
+"""Executors: score one combination on one segment (or a whole program).
+
+* :class:`DryRunExecutor` — the production path on this CPU container:
+  ``jit(...).lower(...).compile()`` + roofline terms from the compiled
+  artifact (cost_analysis + HLO collective parsing).  Per-combination
+  deadlines make a straggling compile a recorded failure instead of a
+  sweep-blocker (ComPar rejects failed combinations the same way).
+* :class:`WallClockExecutor` — ComPar's literal empirical loop: run the
+  program and take the median wall-clock.  Used on CPU for small configs
+  (tests, examples, benchmark suites).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from contextlib import contextmanager
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.combinator import Combination
+from repro.core.cost_model import CostTerms, Hardware, V5E
+from repro.core.segment import Segment
+from repro.core.timer import segment_program
+from repro.runtime.hlo import analyze_hlo
+
+
+class CombinationFailed(Exception):
+    pass
+
+
+@contextmanager
+def deadline(seconds: Optional[int]):
+    """SIGALRM-based straggler guard (single-threaded compile path)."""
+    if not seconds:
+        yield
+        return
+
+    def handler(signum, frame):
+        raise CombinationFailed(f"deadline {seconds}s exceeded")
+
+    old = signal.signal(signal.SIGALRM, handler)
+    signal.alarm(seconds)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+def lower_and_compile(fn, args, shardings, mesh):
+    kw = {}
+    if mesh is not None and shardings is not None:
+        kw["in_shardings"] = shardings
+    jitted = jax.jit(fn, **kw)
+    if mesh is not None:
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+    else:
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def analyze_compiled(lowered, compiled, n_chips: int,
+                     hw: Hardware = V5E) -> CostTerms:
+    """Roofline terms from the compiled (post-SPMD, per-device) module.
+
+    XLA:CPU's cost_analysis counts while bodies once, so we use the
+    call-graph HLO walk (``runtime.hlo.analyze_hlo``) — trip-count-exact
+    flops, an HBM-traffic byte estimator, and ring-factor collective
+    bytes.  All per-device.
+    """
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    res = analyze_hlo(hlo)
+    f_pd, b_pd, c_pd = res["flops"], res["bytes"], res["collective"]
+    ca = compiled.cost_analysis() or {}
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {"argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+               "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+               "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+               "peak_bytes": (getattr(ma, "argument_size_in_bytes", 0)
+                              + getattr(ma, "temp_size_in_bytes", 0))}
+    except Exception:
+        pass
+    terms = CostTerms(
+        compute_s=f_pd / hw.peak_flops,
+        memory_s=b_pd / hw.hbm_bw,
+        collective_s=c_pd / hw.link_bw,
+        flops=f_pd * n_chips,
+        bytes_accessed=b_pd * n_chips,
+        collective_bytes=c_pd,
+        bytes_per_device=mem.get("peak_bytes", 0))
+    terms.detail.update({k: v for k, v in res.items()
+                         if k.startswith("coll_")})
+    terms.detail["xla_cost_analysis_flops"] = float(ca.get("flops", 0.0))
+    terms.detail.update(mem)
+    return terms
+
+
+class DryRunExecutor:
+    def __init__(self, mesh, hw: Hardware = V5E,
+                 timeout_s: Optional[int] = 300):
+        self.mesh = mesh
+        self.hw = hw
+        self.timeout_s = timeout_s
+        self.n_chips = int(mesh.devices.size) if mesh is not None else 1
+
+    def score_segment(self, cfg: ArchConfig, shape: ShapeConfig,
+                      seg: Segment, combo: Combination) -> CostTerms:
+        with deadline(self.timeout_s):
+            try:
+                fn, args, shardings = segment_program(
+                    cfg, shape, seg, combo, self.mesh)
+                lowered, compiled = lower_and_compile(
+                    fn, args, shardings, self.mesh)
+            except CombinationFailed:
+                raise
+            except Exception as e:  # sharding/lowering failure = invalid combo
+                raise CombinationFailed(f"{type(e).__name__}: {e}") from e
+        return analyze_compiled(lowered, compiled, self.n_chips, self.hw)
+
+
+class WallClockExecutor:
+    """Empirical timing on the local device(s) — ComPar's measurement loop."""
+
+    def __init__(self, mesh=None, repeats: int = 5,
+                 timeout_s: Optional[int] = 120):
+        self.mesh = mesh
+        self.repeats = repeats
+        self.timeout_s = timeout_s
+        self.n_chips = int(mesh.devices.size) if mesh is not None else 1
+
+    def score_segment(self, cfg: ArchConfig, shape: ShapeConfig,
+                      seg: Segment, combo: Combination) -> CostTerms:
+        with deadline(self.timeout_s):
+            try:
+                fn, args, shardings = segment_program(
+                    cfg, shape, seg, combo, self.mesh)
+                concrete = jax.tree.map(
+                    lambda s: _materialize(s), args,
+                    is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+                lowered, compiled = lower_and_compile(
+                    fn, concrete, shardings, self.mesh)
+                out = compiled(*concrete)
+                jax.block_until_ready(out)
+                times = []
+                for _ in range(self.repeats):
+                    t0 = time.perf_counter()
+                    out = compiled(*concrete)
+                    jax.block_until_ready(out)
+                    times.append(time.perf_counter() - t0)
+            except CombinationFailed:
+                raise
+            except Exception as e:
+                raise CombinationFailed(f"{type(e).__name__}: {e}") from e
+        wall = float(np.median(times))
+        t = CostTerms(compute_s=wall)
+        t.detail["wall_s"] = wall
+        return t
+
+
+def _materialize(sds: jax.ShapeDtypeStruct):
+    if np.issubdtype(sds.dtype, np.integer):
+        return jax.numpy.zeros(sds.shape, sds.dtype)
+    key = jax.random.key(42)
+    return (jax.random.normal(key, sds.shape, "float32") * 0.02
+            ).astype(sds.dtype)

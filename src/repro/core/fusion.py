@@ -1,0 +1,151 @@
+"""Optimal Plan Generator: fuse per-segment winners into one plan.
+
+Paper-faithful mode: independent per-segment argmin over all valid
+combinations — ComPar's guarantee holds (the fused plan is never worse
+than the best single-provider plan, in the scored metric).
+
+Beyond-paper mode (``boundary_costs=True``): on a distributed mesh,
+adjacent segments with different activation layouts pay a resharding
+collective that ComPar's shared-memory setting never sees.  We charge
+layout transitions and solve the resulting chain by Viterbi DP — still
+exact, now layout-transition-aware.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.combinator import Combination, GlobalKnobs
+from repro.core.cost_model import CostTerms, Hardware, V5E
+from repro.core.plan import Plan
+from repro.core.providers import get_provider
+from repro.core.segment import Segment, fragment
+from repro.runtime.sharding import Rules
+
+
+def _residual_pspec(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                    combo: Combination, seg: Segment):
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) \
+        if mesh is not None else {}
+    mapping = get_provider(combo.provider).mapping(
+        cfg, axis_sizes, combo.flags, seg)
+    rules = Rules(mapping, mesh)
+    if shape.kind == "decode":
+        return rules.pspec(("batch", "embed"),
+                           (shape.global_batch, cfg.d_model))
+    return rules.pspec(("batch", "seq", "embed"),
+                       (shape.global_batch, shape.seq_len, cfg.d_model))
+
+
+def boundary_cost_s(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                    a: Combination, sa: Segment,
+                    b: Combination, sb: Segment,
+                    hw: Hardware = V5E) -> float:
+    """Resharding cost of the residual stream between two segments."""
+    if mesh is None:
+        return 0.0
+    pa = _residual_pspec(cfg, shape, mesh, a, sa)
+    pb = _residual_pspec(cfg, shape, mesh, b, sb)
+    if pa == pb:
+        return 0.0
+    if shape.kind == "decode":
+        elems = shape.global_batch * cfg.d_model
+    else:
+        elems = shape.global_batch * shape.seq_len * cfg.d_model
+    bytes_total = elems * np.dtype(cfg.dtype).itemsize
+    chips = int(mesh.devices.size)
+    return bytes_total / (chips * hw.link_bw)
+
+
+def fuse(cfg: ArchConfig, shape: ShapeConfig, mesh,
+         results: Dict[str, List[Tuple[Combination, CostTerms]]],
+         knobs: GlobalKnobs = GlobalKnobs(), *,
+         boundary_costs: bool = False, hw: Hardware = V5E) -> Plan:
+    """results: segment name -> [(combination, cost)] (valid entries only).
+
+    Returns the fused plan; per-segment predicted costs land in
+    ``plan.meta``.
+    """
+    segs = fragment(cfg)
+    for s in segs:
+        if not results.get(s.name):
+            raise ValueError(f"no valid combination for segment {s.name!r}")
+
+    if not boundary_costs:
+        chosen = {}
+        meta_cost = {}
+        for s in segs:
+            combo, cost = min(results[s.name], key=lambda rc: rc[1].total_s)
+            chosen[s.name] = combo
+            meta_cost[s.name] = cost.total_s
+        return Plan(chosen, knobs,
+                    {"per_segment_s": meta_cost,
+                     "predicted_total_s": sum(meta_cost.values()),
+                     "fusion": "per-segment-argmin"})
+
+    # --- Viterbi DP over the segment chain with transition costs ----------
+    options = {s.name: results[s.name] for s in segs}
+    back: List[Dict[int, Tuple[float, int]]] = []
+    prev_costs = {i: rc[1].total_s
+                  for i, rc in enumerate(options[segs[0].name])}
+    for si in range(1, len(segs)):
+        s_prev, s_cur = segs[si - 1], segs[si]
+        cur: Dict[int, Tuple[float, int]] = {}
+        for j, (cj, costj) in enumerate(options[s_cur.name]):
+            best = (math.inf, -1)
+            for i, (ci, _) in enumerate(options[s_prev.name]):
+                t = boundary_cost_s(cfg, shape, mesh, ci, s_prev,
+                                    cj, s_cur, hw)
+                cand = prev_costs[i] + t
+                if cand < best[0]:
+                    best = (cand, i)
+            cur[j] = (best[0] + costj.total_s, best[1])
+        back.append(cur)
+        prev_costs = {j: v[0] for j, v in cur.items()}
+    # trace back
+    j = min(prev_costs, key=prev_costs.get)
+    total = prev_costs[j]
+    chosen_idx = [0] * len(segs)
+    chosen_idx[-1] = j
+    for si in range(len(segs) - 1, 0, -1):
+        j = back[si - 1][j][1]
+        chosen_idx[si - 1] = j
+    chosen = {s.name: options[s.name][chosen_idx[i]][0]
+              for i, s in enumerate(segs)}
+    meta_cost = {s.name: options[s.name][chosen_idx[i]][1].total_s
+                 for i, s in enumerate(segs)}
+    return Plan(chosen, knobs,
+                {"per_segment_s": meta_cost, "predicted_total_s": total,
+                 "fusion": "viterbi-boundary"})
+
+
+def best_uniform(cfg: ArchConfig,
+                 results: Dict[str, List[Tuple[Combination, CostTerms]]],
+                 knobs: GlobalKnobs = GlobalKnobs()) -> Tuple[Plan, float]:
+    """The best *single-provider-everywhere* plan (the paper's baseline).
+
+    Only combinations valid on every segment qualify (a provider that
+    fails on any segment cannot compile the whole program — exactly
+    ComPar's 'compiler fails on benchmark' case)."""
+    segs = fragment(cfg)
+    by_cid: Dict[str, Dict[str, Tuple[Combination, CostTerms]]] = {}
+    for s in segs:
+        for combo, cost in results.get(s.name, []):
+            by_cid.setdefault(combo.cid, {})[s.name] = (combo, cost)
+    best: Optional[Tuple[Plan, float]] = None
+    for cid, per_seg in by_cid.items():
+        if len(per_seg) != len(segs):
+            continue
+        total = sum(c.total_s for _, c in per_seg.values())
+        combo = next(iter(per_seg.values()))[0]
+        if best is None or total < best[1]:
+            plan = Plan({s.name: combo for s in segs}, knobs,
+                        {"predicted_total_s": total, "fusion": "uniform"})
+            best = (plan, total)
+    if best is None:
+        raise ValueError("no combination is valid on all segments")
+    return best

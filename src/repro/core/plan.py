@@ -1,0 +1,93 @@
+"""Parallelization plans: per-segment Combination + global knobs.
+
+A :class:`Plan` is ComParX's "output program": where ComPar emits a fused
+C file, ComParX emits a serializable plan that the step builders apply to
+the jitted program (sharding rules + remat + kernels + microbatching).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.configs.base import ArchConfig
+from repro.core.combinator import Combination, GlobalKnobs
+from repro.core.providers import get_provider
+from repro.core.segment import Segment, fragment
+from repro.models.context import ModelContext, SegmentClause
+from repro.runtime.sharding import Rules
+
+
+@dataclass
+class Plan:
+    segments: Dict[str, Combination]
+    knobs: GlobalKnobs = field(default_factory=GlobalKnobs)
+    meta: Dict[str, object] = field(default_factory=dict)
+
+    def to_json(self) -> Dict:
+        return {"segments": {k: c.to_json() for k, c in self.segments.items()},
+                "knobs": vars(self.knobs), "meta": self.meta}
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "Plan":
+        return cls({k: Combination.from_json(v)
+                    for k, v in d["segments"].items()},
+                   GlobalKnobs(**d["knobs"]), d.get("meta", {}))
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2, sort_keys=True)
+
+    @classmethod
+    def load(cls, path: str) -> "Plan":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+    def describe(self) -> str:
+        lines = [f"knobs: {self.knobs.key()}"]
+        for seg, c in sorted(self.segments.items()):
+            lines.append(f"  {seg:8s} -> {c.label()}")
+        return "\n".join(lines)
+
+
+def uniform_plan(cfg: ArchConfig, provider: str,
+                 flags=frozenset(), clause: Optional[SegmentClause] = None,
+                 knobs: Optional[GlobalKnobs] = None) -> Plan:
+    """Single-provider plan — the "one compiler for the whole program"
+    baseline that ComPar's fusion is compared against."""
+    clause = clause or SegmentClause()
+    combo = Combination(provider, frozenset(flags), clause)
+    return Plan({s.name: combo for s in fragment(cfg)},
+                knobs or GlobalKnobs())
+
+
+def dp_shards(mesh) -> int:
+    """Number of data-parallel shards (pod x data axes)."""
+    if mesh is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
+def build_contexts(cfg: ArchConfig, mesh, plan: Plan,
+                   *, interpret: bool = True) -> Dict[str, ModelContext]:
+    """Apply a plan: per-segment ModelContext with provider rules."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) \
+        if mesh is not None else {}
+    ctxs: Dict[str, ModelContext] = {}
+    groups = dp_shards(mesh)
+    for seg in fragment(cfg):
+        combo = plan.segments.get(seg.name)
+        if combo is None:
+            combo = next(iter(plan.segments.values()))
+        provider = get_provider(combo.provider)
+        mapping = provider.mapping(cfg, axis_sizes, combo.flags, seg)
+        ctxs[seg.name] = ModelContext(
+            rules=Rules(mapping, mesh), clause=combo.clause,
+            moe_groups=groups, interpret=interpret)
+    return ctxs
+
+
+def segment_rules(cfg: ArchConfig, mesh, plan: Plan) -> Dict[str, Rules]:
+    return {k: c.rules for k, c in
+            build_contexts(cfg, mesh, plan).items()}

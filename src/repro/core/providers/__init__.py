@@ -1,0 +1,7 @@
+from repro.core.providers.base import (  # noqa: F401
+    Provider, all_providers, get_provider, register,
+)
+import repro.core.providers.tensor_par  # noqa: F401
+import repro.core.providers.fsdp        # noqa: F401
+import repro.core.providers.hybrid2d    # noqa: F401
+import repro.core.providers.expert_par  # noqa: F401

@@ -1,0 +1,52 @@
+"""Fragmentor: enumerate + annotate the parallelizable segments of a model.
+
+ComPar's Fragmentor enumerates loops; here the natural "loop nests" of an
+LM are its scan groups (the ``lax.scan`` over homogeneous layers IS a
+loop), plus the embedding and head segments.  All structurally identical
+layers share one decision — exactly how ComPar treats one loop nest as one
+tuning unit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class Segment:
+    name: str                       # "embed", "g0", ..., "head"
+    kind: str                       # embed | stack | head
+    pattern: Tuple[str, ...] = ()   # block kinds for stack segments
+    repeats: int = 1
+
+    @property
+    def has_moe(self) -> bool:
+        return any(k == "attn_moe" for k in self.pattern)
+
+    @property
+    def has_attn(self) -> bool:
+        return any(k.startswith("attn") for k in self.pattern)
+
+    @property
+    def has_recurrent(self) -> bool:
+        return any(k in ("rec", "mlstm", "slstm") for k in self.pattern)
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.pattern) * self.repeats
+
+
+def fragment(cfg: ArchConfig) -> Tuple[Segment, ...]:
+    """Enumerate and annotate all segments (the Fragmentor)."""
+    segs = [Segment("embed", "embed")]
+    for gi, group in enumerate(cfg.stack_plan()):
+        segs.append(Segment(f"g{gi}", "stack", tuple(group.pattern),
+                            group.repeats))
+    segs.append(Segment("head", "head"))
+    return tuple(segs)
+
+
+def stack_segments(cfg: ArchConfig) -> Tuple[Segment, ...]:
+    return tuple(s for s in fragment(cfg) if s.kind == "stack")

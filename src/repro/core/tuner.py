@@ -1,0 +1,160 @@
+"""ComParX tuner: the paper's end-to-end workflow (Fig. 1).
+
+Fragmentor -> Combinator (-> DB register) -> Parallelizer+Executor per
+combination (-> DB record, Continue-mode resumable) -> black-box validation
+-> Optimal Plan Generator -> fused Plan.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.combinator import (Combination, GlobalKnobs,
+                                   enumerate_combinations,
+                                   paper_combination_count)
+from repro.core.cost_model import CostTerms
+from repro.core.db import SweepDB
+from repro.core.executor import (CombinationFailed, DryRunExecutor,
+                                 WallClockExecutor)
+from repro.core.fusion import best_uniform, fuse
+from repro.core.plan import Plan
+from repro.core.providers import all_providers, get_provider
+from repro.core.segment import Segment, fragment
+from repro.core.validator import validate_combination
+
+log = logging.getLogger("repro.tuner")
+
+
+@dataclass
+class SweepReport:
+    project: str
+    n_combinations: int
+    n_done: int = 0
+    n_failed: int = 0
+    n_invalid: int = 0
+    paper_count: int = 0
+    elapsed_s: float = 0.0
+    per_segment: Dict[str, List[Tuple[Combination, CostTerms]]] = \
+        field(default_factory=dict)
+
+    def summary(self) -> str:
+        return (f"project={self.project} combos={self.n_combinations} "
+                f"done={self.n_done} failed={self.n_failed} "
+                f"invalid={self.n_invalid} "
+                f"paper_formula_upper_bound={self.paper_count} "
+                f"elapsed={self.elapsed_s:.1f}s")
+
+
+class ComParTuner:
+    def __init__(self, cfg: ArchConfig, shape: ShapeConfig, mesh=None, *,
+                 db: Optional[SweepDB] = None, project: Optional[str] = None,
+                 mode: str = "new", executor: str = "dryrun",
+                 validate: bool = False, timeout_s: Optional[int] = 300):
+        self.cfg = cfg
+        self.shape = shape
+        self.mesh = mesh
+        self.db = db or SweepDB(":memory:")
+        name = project or f"{cfg.name}-{shape.name}"
+        self.project = self.db.open_project(
+            name, mode, {"arch": cfg.name, "shape": shape.name})
+        if executor == "dryrun":
+            self.executor = DryRunExecutor(mesh, timeout_s=timeout_s)
+        elif executor == "wallclock":
+            self.executor = WallClockExecutor(mesh, timeout_s=timeout_s)
+        else:
+            raise ValueError(executor)
+        self.validate = validate
+
+    # ------------------------------------------------------------------
+    def sweep(self, providers: Optional[Sequence[str]] = None,
+              clause_space=None, *, budget: Optional[int] = None,
+              knobs: GlobalKnobs = GlobalKnobs(),
+              boundary_costs: bool = False,
+              max_flags: Optional[int] = None) -> Tuple[Plan, SweepReport]:
+        t0 = time.time()
+        providers = list(providers or all_providers())
+        segs = fragment(self.cfg)
+        combos = enumerate_combinations(providers, clause_space,
+                                        budget=budget, max_flags=max_flags)
+        rep = SweepReport(
+            self.project, n_combinations=0,
+            paper_count=paper_combination_count(
+                [len(get_provider(p).flags) for p in providers],
+                n_rtl=len(vars(knobs)),
+                n_d=len(clause_space or {}) or 6))
+
+        # Combinator: register every (segment, combination) in the DB
+        per_seg_combos: Dict[str, List[Combination]] = {}
+        for seg in segs:
+            cs = [c for c in combos
+                  if get_provider(c.provider).applicable(self.cfg, seg)]
+            per_seg_combos[seg.name] = cs
+            rep.n_combinations += len(cs)
+            for c in cs:
+                self.db.register(self.project, seg.name, c)
+
+        # Executor: score everything not already done (Continue mode)
+        for seg in segs:
+            for c in per_seg_combos[seg.name]:
+                st = self.db.status(self.project, seg.name, c.cid)
+                if st in ("done", "failed", "invalid"):
+                    continue
+                self._run_one(seg, c, rep)
+
+        # collect valid results
+        for seg in segs:
+            rows = self.db.results(self.project, seg.name)
+            good = [(r["combo"], CostTerms.from_dict(r["cost"]))
+                    for r in rows if r["status"] == "done"]
+            rep.per_segment[seg.name] = good
+        counts = self.db.done_count(self.project)
+        rep.n_done = counts.get("done", 0)
+        rep.n_failed = counts.get("failed", 0)
+        rep.n_invalid = counts.get("invalid", 0)
+
+        plan = fuse(self.cfg, self.shape, self.mesh, rep.per_segment,
+                    knobs, boundary_costs=boundary_costs)
+        plan.meta["project"] = self.project
+        rep.elapsed_s = time.time() - t0
+        log.info(rep.summary())
+        return plan, rep
+
+    def _run_one(self, seg: Segment, c: Combination, rep: SweepReport):
+        if self.validate:
+            ok, msg = validate_combination(self.cfg, c)
+            if not ok:
+                self.db.record(self.project, seg.name, c.cid,
+                               status="invalid", error=msg)
+                return
+        try:
+            cost = self.executor.score_segment(self.cfg, self.shape, seg, c)
+        except CombinationFailed as e:
+            self.db.record(self.project, seg.name, c.cid,
+                           status="failed", error=str(e))
+            return
+        self.db.record(self.project, seg.name, c.cid, status="done",
+                       cost=cost.as_dict())
+
+    # ------------------------------------------------------------------
+    def baselines(self, knobs: GlobalKnobs = GlobalKnobs()):
+        """Per-provider best uniform plans + the fused plan comparison
+        (the numbers behind the Fig. 2/4 analogues)."""
+        segs = fragment(self.cfg)
+        rows = {s.name: [(r["combo"], CostTerms.from_dict(r["cost"]))
+                         for r in self.db.results(self.project, s.name)
+                         if r["status"] == "done"]
+                for s in segs}
+        out = {}
+        for pname in all_providers():
+            per_seg = {sn: [(c, t) for c, t in rs if c.provider == pname]
+                       for sn, rs in rows.items()}
+            if all(per_seg.values()):
+                try:
+                    plan, total = best_uniform(self.cfg, per_seg, knobs)
+                    out[pname] = total
+                except ValueError:
+                    pass
+        return out

@@ -1,0 +1,99 @@
+"""Deterministic, resumable, host-sharded synthetic LM data pipeline.
+
+Every batch is a pure function of (seed, step, host slice), so:
+
+* restart at step k replays exactly the same stream (fault tolerance);
+* each host materializes only its slice of the global batch (the same
+  contract a real multi-host loader has on a 1000-node pod);
+* no filesystem or network dependency in this container.
+
+The token stream is a mixture of structured patterns (ramps, repeats,
+n-gram motifs) rather than iid noise, so a ~100M model trained on it shows
+a real, visible loss curve (examples/train_e2e.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+@dataclass
+class DataState:
+    """Serializable pipeline position (goes into every checkpoint)."""
+    seed: int
+    step: int
+
+    def as_dict(self):
+        return {"seed": self.seed, "step": self.step}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(int(d["seed"]), int(d["step"]))
+
+
+def _batch_tokens(key, batch: int, seq: int, vocab: int) -> jax.Array:
+    """Structured pseudo-language: motif repetition + local ramps."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    motif_len = 16
+    n_motifs = 32
+    motifs = jax.random.randint(k1, (n_motifs, motif_len), 0, vocab)
+    idx = jax.random.randint(k2, (batch, (seq + motif_len - 1) // motif_len),
+                             0, n_motifs)
+    base = motifs[idx].reshape(batch, -1)[:, :seq]
+    ramp = (jnp.arange(seq)[None, :]
+            + jax.random.randint(k3, (batch, 1), 0, vocab)) % vocab
+    use_ramp = jax.random.bernoulli(k4, 0.3, (batch, 1))
+    return jnp.where(use_ramp, ramp, base).astype(jnp.int32)
+
+
+class SyntheticLM:
+    def __init__(self, cfg: ArchConfig, shape: ShapeConfig, *,
+                 seed: int = 0, host_index: int = 0, host_count: int = 1):
+        assert shape.global_batch % host_count == 0 or host_count == 1
+        self.cfg = cfg
+        self.shape = shape
+        self.state = DataState(seed, 0)
+        self.host_index = host_index
+        self.host_count = host_count
+        self.local_batch = max(1, shape.global_batch // host_count)
+
+    def _key(self, step: int):
+        return jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(self.state.seed), step),
+            self.host_index)
+
+    def batch_at(self, step: int) -> Dict[str, jax.Array]:
+        """Pure function of step (the resumability contract)."""
+        key = self._key(step)
+        B, S, V = self.local_batch, self.shape.seq_len, self.cfg.vocab_size
+        toks = _batch_tokens(key, B, S + 1, V)
+        out: Dict[str, jax.Array] = {"targets": toks[:, 1:]}
+        if self.cfg.frontend != "none":
+            ke = jax.random.fold_in(key, 7)
+            out["embeds"] = (jax.random.normal(
+                ke, (B, S, self.cfg.d_model), jnp.float32) * 0.02
+            ).astype(self.cfg.dtype)
+        else:
+            out["tokens"] = toks[:, :-1]
+        return out
+
+    def __next__(self) -> Dict[str, jax.Array]:
+        b = self.batch_at(self.state.step)
+        self.state.step += 1
+        return b
+
+    def __iter__(self):
+        return self
+
+    # --- checkpoint integration ---------------------------------------
+    def snapshot(self) -> Dict:
+        return self.state.as_dict()
+
+    def restore(self, d: Dict):
+        self.state = DataState.from_dict(d)

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,H,Sq,D), k/v: (B,KV,Sk,D) -> (B,H,Sq,D). f32 math."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, Sq, D)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, k.astype(jnp.float32))
+    s = s * (D ** -0.5)
+    iq = jnp.arange(Sq)[:, None]
+    ik = jnp.arange(Sk)[None, :]
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= iq >= ik
+    if window:
+        m &= iq - ik < window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def flash_decode_ref(q, k, v, pos):
+    """q: (B,H,D); k/v: (B,Smax,KV,D); pos scalar -> (B,H,D)."""
+    B, H, D = q.shape
+    Smax, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k.astype(jnp.float32))
+    s = s * (D ** -0.5)
+    m = jnp.arange(Smax) <= pos
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def rglru_ref(log_a, b):
+    """h_t = exp(log_a_t) * h_{t-1} + b_t over axis 1. (B,S,dr) f32."""
+    def combine(x, y):
+        la1, b1 = x
+        la2, b2 = y
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+    _, h = jax.lax.associative_scan(
+        combine, (log_a.astype(jnp.float32), b.astype(jnp.float32)), axis=1)
+    return h
+
+
+def mlstm_ref(q, k, v, li, lf):
+    """Fully-recurrent stabilized mLSTM oracle (step by step).
+
+    q,k,v: (B,H,S,dh) f32 (q pre-scaled); li,lf: (B,H,S) f32.
+    Returns h: (B,H,S,dh).
+    """
+    B, H, S, dh = q.shape
+
+    def step(state, t):
+        C, n, m = state
+        lf_t, li_t = lf[:, :, t], li[:, :, t]
+        m_new = jnp.maximum(lf_t + m, li_t)
+        f = jnp.exp(lf_t + m - m_new)
+        i = jnp.exp(li_t - m_new)
+        C = f[..., None, None] * C \
+            + i[..., None, None] * (k[:, :, t, :, None] * v[:, :, t, None, :])
+        n = f[..., None] * n + i[..., None] * k[:, :, t]
+        num = jnp.einsum("bhd,bhde->bhe", q[:, :, t], C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q[:, :, t], n)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    state = (jnp.zeros((B, H, dh, dh), jnp.float32),
+             jnp.zeros((B, H, dh), jnp.float32),
+             jnp.zeros((B, H), jnp.float32))
+    _, hs = jax.lax.scan(step, state, jnp.arange(S))
+    return jnp.moveaxis(hs, 0, 2)                      # (B,H,S,dh)
+
+
+def rmsnorm_ref(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)

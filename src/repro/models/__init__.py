@@ -1,0 +1,8 @@
+from repro.models.context import ModelContext, SegmentClause  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    forward, decode_step, model_specs, cache_specs, init_cache,
+    segment_names, SEG_EMBED, SEG_HEAD,
+)
+from repro.models.params import (  # noqa: F401
+    ParamSpec, init_params, abstract_params, param_pspecs, param_count,
+)

@@ -1,0 +1,109 @@
+"""Shared layer primitives: norms, activations, RoPE, dense application."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+
+# --- activations -----------------------------------------------------------
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu, "tanh": jnp.tanh}[name]
+
+
+# --- norms ------------------------------------------------------------------
+
+def norm_specs(d: int, kind: str, dtype: str):
+    s = {"scale": ParamSpec((d,), ("embed",), "ones", dtype=dtype)}
+    if kind == "layernorm":
+        s["bias"] = ParamSpec((d,), ("embed",), "zeros", dtype=dtype)
+    return s
+
+
+def norm_apply(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        xf = xf - mu
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if kind == "layernorm":
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --- dense -----------------------------------------------------------------
+
+def dense(x, w):
+    """Contract the last dim of x with the first dim of w.
+
+    Output stays in the activation dtype (bf16 on the TPU target): the MXU
+    accumulates in f32 internally, and keeping dot outputs bf16 halves the
+    bytes the remat policy saves per layer (see EXPERIMENTS §Perf).
+    """
+    return jax.lax.dot_general(
+        x, w.astype(x.dtype),
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+    )
+
+
+# --- RoPE -------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, rotary_dim: Optional[int] = None,
+               base: float = 10000.0):
+    rd = rotary_dim or head_dim
+    exps = jnp.arange(0, rd, 2, dtype=jnp.float32) / rd
+    return 1.0 / (base ** exps)                       # (rd//2,)
+
+
+def apply_rope(x, positions, style: str = "full", base: float = 10000.0):
+    """x: (..., S, H, D) or (..., H, D) with scalar positions.
+
+    ``style``: ``full`` rotates all of D; ``2d`` (chatglm) rotates only the
+    first half of D; ``none`` is identity.
+    """
+    if style == "none":
+        return x
+    D = x.shape[-1]
+    rd = D // 2 if style == "2d" else D
+    rd -= rd % 2
+    inv = rope_freqs(D, rd, base)                     # (rd//2,)
+    theta = positions[..., None].astype(jnp.float32) * inv    # (..., rd//2)
+    cos, sin = jnp.cos(theta), jnp.sin(theta)
+    # broadcast over the head axis, which sits between seq and head_dim
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    xr = x[..., :rd].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rot = jnp.stack([r1, r2], axis=-1).reshape(*xr.shape)
+    return jnp.concatenate([rot.astype(x.dtype), x[..., rd:]], axis=-1)
+
+
+# --- temporal conv (decode-friendly) ----------------------------------------
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv along the seq axis.
+
+    x: (B, S, D); w: (W, D).  If ``state`` (B, W-1, D) is given, it is the
+    decode-time history; returns (y, new_state).
+    """
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (W - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+W-1, D)
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):
+        y = y + xp[:, i:i + x.shape[1], :].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    new_state = xp[:, -(W - 1):, :] if W > 1 else pad
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,29 @@
+"""Causal LM loss: cross-entropy with z-loss and optional masking."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits, targets, *, z_loss: float = 1e-4, mask=None):
+    """logits: (..., V) f32; targets: (...,) int32.
+
+    Returns (mean loss, metrics dict).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None],
+                             axis=-1)[..., 0]
+    nll = lse - ll
+    zl = z_loss * jnp.square(lse)
+    per_tok = nll + zl
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(m), 1.0)
+        loss = jnp.sum(per_tok * m) / denom
+        acc_n = jnp.sum((jnp.argmax(logits, -1) == targets) * m) / denom
+    else:
+        loss = jnp.mean(per_tok)
+        acc_n = jnp.mean(jnp.argmax(logits, -1) == targets)
+    return loss, {"nll": jnp.mean(nll), "z_loss": jnp.mean(zl),
+                  "accuracy": acc_n}

@@ -1,0 +1,105 @@
+"""Griffin/RecurrentGemma recurrent block: gated branch x (conv + RG-LRU).
+
+RG-LRU: ``h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)`` with
+``a_t = exp(-c * softplus(L) * r_t)``, ``r_t/i_t`` input-dependent sigmoid
+gates.  Train/prefill uses an associative scan (log-depth); decode is a
+single-step update.  The Pallas kernel (``repro.kernels.rglru``) implements
+the same recurrence as a blocked sequential in-VMEM scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.context import ModelContext
+from repro.models.layers import causal_conv1d, dense, norm_apply, norm_specs
+from repro.models.params import ParamSpec
+
+RGLRU_C = 8.0
+
+
+def rglru_dims(cfg: ArchConfig) -> int:
+    return int(cfg.expand_factor * cfg.d_model)
+
+
+def rec_specs(cfg: ArchConfig, dtype=None):
+    dt = dtype or cfg.dtype
+    d = cfg.d_model
+    dr = rglru_dims(cfg)
+    s = d ** -0.5
+    sr = dr ** -0.5
+    return {
+        "ln": norm_specs(d, cfg.norm, dt),
+        "w_gate": ParamSpec((d, dr), ("embed", "rnn"), "normal", s, dt),
+        "w_x": ParamSpec((d, dr), ("embed", "rnn"), "normal", s, dt),
+        "conv": ParamSpec((cfg.conv_width, dr), ("conv", "rnn"), "normal",
+                          cfg.conv_width ** -0.5, dt),
+        "w_a": ParamSpec((dr, dr), ("rnn", None), "normal", sr, "float32"),
+        "w_i": ParamSpec((dr, dr), ("rnn", None), "normal", sr, "float32"),
+        "lam": ParamSpec((dr,), ("rnn",), "ones", dtype="float32"),
+        "w_out": ParamSpec((dr, d), ("rnn", "embed"), "normal", sr, dt),
+    }
+
+
+def rec_state_spec(cfg: ArchConfig, batch: int):
+    dr = rglru_dims(cfg)
+    return {
+        "h": jax.ShapeDtypeStruct((batch, dr), jnp.dtype("float32")),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, dr),
+                                     jnp.dtype(cfg.dtype)),
+    }
+
+
+def _rglru_coeffs(p, u):
+    """u: (..., dr) post-conv input -> (a, b) recurrence coefficients f32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"])
+    i = jax.nn.sigmoid(uf @ p["w_i"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r
+    # sqrt(1 - a^2) computed stably via expm1
+    scale = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b = scale * (i * uf)
+    return log_a, b
+
+
+def rglru_scan(a, b, h0=None):
+    """Associative linear recurrence over axis 1. a,b: (B,S,dr)."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh
+
+
+def rec_apply(p, x, cfg: ArchConfig, ctx: ModelContext):
+    """Full-sequence recurrent block (pre-norm residual). x: (B,S,d)."""
+    xn = norm_apply(p["ln"], x, cfg.norm)
+    gate = jax.nn.gelu(dense(xn, p["w_gate"]))
+    u = dense(xn, p["w_x"])
+    u, _ = causal_conv1d(u, p["conv"])
+    log_a, b = _rglru_coeffs(p, u)
+    if ctx.clause.kernel == "pallas":
+        from repro.kernels import ops as kops
+        h = kops.rglru(log_a, b, chunk=ctx.clause.mlstm_chunk,
+                       interpret=ctx.interpret)
+    else:
+        h = rglru_scan(jnp.exp(log_a), b)
+    y = dense((h.astype(x.dtype) * gate), p["w_out"])
+    y = ctx.constrain(y, ("batch", "seq", "embed"))
+    return x + y
+
+
+def rec_decode(p, x1, state, cfg: ArchConfig, ctx: ModelContext):
+    """One-token recurrent step. x1: (B,d)."""
+    xn = norm_apply(p["ln"], x1[:, None], cfg.norm)
+    gate = jax.nn.gelu(dense(xn, p["w_gate"]))
+    u = dense(xn, p["w_x"])
+    u, new_conv = causal_conv1d(u, p["conv"], state["conv"])
+    log_a, b = _rglru_coeffs(p, u)
+    h = jnp.exp(log_a[:, 0]) * state["h"] + b[:, 0]
+    y = dense((h[:, None].astype(x1.dtype) * gate), p["w_out"])[:, 0]
+    return x1 + y, {"h": h, "conv": new_conv}

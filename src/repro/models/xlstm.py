@@ -1,0 +1,278 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and recurrent sLSTM.
+
+The mLSTM is a gated linear-attention cell with matrix state
+``C (dk x dv)``; the chunkwise-parallel form (intra-chunk quadratic +
+inter-chunk recurrent state) is the TPU-friendly formulation — the Pallas
+kernel in ``repro.kernels.mlstm`` implements the same per-chunk math.
+States are kept log-stabilized: semantic state is ``(C e^m, n e^m)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.context import ModelContext
+from repro.models.layers import causal_conv1d, dense, norm_apply, norm_specs
+from repro.models.params import ParamSpec
+
+LOG_EPS = -30.0
+
+
+def _logsigmoid(x):
+    return -jax.nn.softplus(-x)
+
+
+# =====================================================================
+# mLSTM
+# =====================================================================
+
+def mlstm_dims(cfg: ArchConfig):
+    di = int(cfg.expand_factor * cfg.d_model)
+    H = cfg.num_heads
+    assert di % H == 0
+    return di, H, di // H
+
+
+def mlstm_specs(cfg: ArchConfig, dtype=None):
+    dt = dtype or cfg.dtype
+    d = cfg.d_model
+    di, H, dh = mlstm_dims(cfg)
+    s = d ** -0.5
+    si = di ** -0.5
+    return {
+        "ln": norm_specs(d, cfg.norm, dt),
+        "w_up": ParamSpec((d, 2 * di), ("embed", "rnn"), "normal", s, dt),
+        "conv": ParamSpec((cfg.conv_width, di), ("conv", "rnn"), "normal",
+                          cfg.conv_width ** -0.5, dt),
+        "wq": ParamSpec((di, H, dh), ("rnn", "heads", "head_dim"), "normal", si, dt),
+        "wk": ParamSpec((di, H, dh), ("rnn", "heads", "head_dim"), "normal", si, dt),
+        "wv": ParamSpec((di, H, dh), ("rnn", "heads", "head_dim"), "normal", si, dt),
+        "w_if": ParamSpec((d, 2, H), ("embed", None, "heads"), "normal", s, "float32"),
+        "b_if": ParamSpec((2, H), (None, "heads"), "zeros", dtype="float32"),
+        "gn": {"scale": ParamSpec((di,), ("rnn",), "ones", dtype=dt)},
+        "w_down": ParamSpec((di, d), ("rnn", "embed"), "normal", si, dt),
+    }
+
+
+def mlstm_state_spec(cfg: ArchConfig, batch: int):
+    di, H, dh = mlstm_dims(cfg)
+    f32 = jnp.dtype("float32")
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "C": jax.ShapeDtypeStruct((batch, H, dh, dh), f32),
+        "n": jax.ShapeDtypeStruct((batch, H, dh), f32),
+        "m": jax.ShapeDtypeStruct((batch, H), f32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1,
+                                      int(cfg.expand_factor * cfg.d_model)), dt),
+    }
+
+
+def mlstm_chunk(q, k, v, li, lf, state):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    q,k,v: (B,H,c,dh) f32 (q pre-scaled by dh**-0.5); li,lf: (B,H,c) f32;
+    state: (C (B,H,dk,dv), n (B,H,dk), m (B,H)).
+    Returns h (B,H,c,dh) and the new state.
+    """
+    C, n, m = state
+    B, H, c, dh = q.shape
+    b = jnp.cumsum(lf, axis=-1)                        # (B,H,c) inclusive
+    total = b[..., -1:]                                # (B,H,1)
+    # intra-chunk log decay matrix D[j,l] = li_l + b_j - b_l  (l <= j)
+    D = li[..., None, :] + b[..., :, None] - b[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    D = jnp.where(mask, D, LOG_EPS)
+    m_state = m[..., None] + b                         # (B,H,c)
+    m_j = jnp.maximum(jnp.max(D, axis=-1), m_state)    # (B,H,c)
+    S = jnp.exp(D - m_j[..., None]) * (q @ jnp.swapaxes(k, -1, -2))
+    state_w = jnp.exp(m_state - m_j)                   # (B,H,c)
+    num = S @ v + state_w[..., None] * (q @ C)
+    den_dot = jnp.einsum("bhcd,bhd->bhc", q, n) * state_w \
+        + jnp.sum(S, axis=-1)
+    den = jnp.maximum(jnp.abs(den_dot), jnp.exp(-m_j))
+    h = num / den[..., None]
+    # ---- state update ----
+    k_w_log = li + (total - b)                         # decay k_j to chunk end
+    m_new = jnp.maximum(m + total[..., 0],
+                        jnp.max(k_w_log, axis=-1))     # (B,H)
+    carry_w = jnp.exp(m + total[..., 0] - m_new)       # (B,H)
+    k_w = jnp.exp(k_w_log - m_new[..., None])          # (B,H,c)
+    C_new = carry_w[..., None, None] * C \
+        + jnp.einsum("bhc,bhcd,bhce->bhde", k_w, k, v)
+    n_new = carry_w[..., None] * n \
+        + jnp.einsum("bhc,bhcd->bhd", k_w, k)
+    return h, (C_new, n_new, m_new)
+
+
+def _mlstm_qkvif(p, x, cfg: ArchConfig, conv_state=None):
+    """Shared projection path. x: (B,S,d) -> q,k,v (B,H,S,dh), li/lf (B,H,S)."""
+    di, H, dh = mlstm_dims(cfg)
+    u = dense(x, p["w_up"])                            # (B,S,2*di)
+    z, gate = jnp.split(u, 2, axis=-1)
+    cz, new_conv = causal_conv1d(z, p["conv"], conv_state)
+    cz = jax.nn.silu(cz)
+    q = jnp.einsum("bsi,ihd->bhsd", cz, p["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bsi,ihd->bhsd", cz, p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bsi,ihd->bhsd", z, p["wv"]).astype(jnp.float32)
+    q = q * dh ** -0.5
+    gif = jnp.einsum("bsd,dgh->bgsh", x.astype(jnp.float32), p["w_if"]) \
+        + p["b_if"][None, :, None, :]
+    li = jnp.swapaxes(gif[:, 0], 1, 2)                 # (B,H,S)
+    lf = _logsigmoid(jnp.swapaxes(gif[:, 1], 1, 2))
+    return q, k, v, li, lf, gate, new_conv, (di, H, dh)
+
+
+def _mlstm_out(p, h, gate, x, cfg: ArchConfig):
+    """h: (B,H,S,dh) -> residual output (B,S,d)."""
+    B, H, S, dh = h.shape
+    hb = jnp.moveaxis(h, 1, 2).reshape(B, S, H * dh).astype(x.dtype)
+    hb = norm_apply(p["gn"], hb, "rmsnorm")
+    hb = hb * jax.nn.silu(gate)
+    return dense(hb, p["w_down"])
+
+
+def mlstm_apply(p, x, cfg: ArchConfig, ctx: ModelContext):
+    """Full-sequence mLSTM block (pre-norm residual)."""
+    xin = x
+    xn = norm_apply(p["ln"], x, cfg.norm)
+    q, k, v, li, lf, gate, _, (di, H, dh) = _mlstm_qkvif(p, xn, cfg)
+    B, _, S, _ = q.shape
+    c = min(ctx.clause.mlstm_chunk, S)
+    while S % c:
+        c -= 1
+    if ctx.clause.kernel == "pallas":
+        from repro.kernels import ops as kops
+        h = kops.mlstm_chunkwise(q, k, v, li, lf, chunk=c,
+                                 interpret=ctx.interpret)
+    else:
+        nc = S // c
+        def step(state, inp):
+            qc, kc, vc, lic, lfc = inp
+            h, new = mlstm_chunk(qc, kc, vc, lic, lfc, state)
+            return new, h
+        rs = lambda t: jnp.moveaxis(
+            t.reshape(*t.shape[:2], nc, c, *t.shape[3:]), 2, 0)
+        state0 = (jnp.zeros((B, H, dh, dh), jnp.float32),
+                  jnp.zeros((B, H, dh), jnp.float32),
+                  jnp.zeros((B, H), jnp.float32))
+        _, hs = jax.lax.scan(step, state0,
+                             (rs(q), rs(k), rs(v), rs(li), rs(lf)))
+        h = jnp.moveaxis(hs, 0, 2).reshape(B, H, S, dh)
+    y = _mlstm_out(p, h, gate, x, cfg)
+    y = ctx.constrain(y, ("batch", "seq", "embed"))
+    return xin + y
+
+
+def mlstm_decode(p, x1, state, cfg: ArchConfig, ctx: ModelContext):
+    """One-token mLSTM step. x1: (B,d)."""
+    xn = norm_apply(p["ln"], x1[:, None], cfg.norm)
+    q, k, v, li, lf, gate, new_conv, _ = _mlstm_qkvif(
+        p, xn, cfg, conv_state=state["conv"])
+    h, (C, n, m) = mlstm_chunk(q, k, v, li, lf,
+                               (state["C"], state["n"], state["m"]))
+    y = _mlstm_out(p, h, gate, xn, cfg)[:, 0]
+    new_state = {"C": C, "n": n, "m": m, "conv": new_conv}
+    return x1 + y, new_state
+
+
+# =====================================================================
+# sLSTM
+# =====================================================================
+
+def slstm_dims(cfg: ArchConfig):
+    H = cfg.num_heads
+    assert cfg.d_model % H == 0
+    return H, cfg.d_model // H
+
+
+def slstm_specs(cfg: ArchConfig, dtype=None):
+    dt = dtype or cfg.dtype
+    d = cfg.d_model
+    H, dh = slstm_dims(cfg)
+    ff = max(64, int(round(d * 4 / 3 / 64)) * 64)
+    s = d ** -0.5
+    return {
+        "ln": norm_specs(d, cfg.norm, dt),
+        "conv": ParamSpec((cfg.conv_width, d), ("conv", "embed"), "normal",
+                          cfg.conv_width ** -0.5, dt),
+        "w": ParamSpec((d, 4, H, dh), ("embed", None, "heads", "head_dim"),
+                       "normal", s, "float32"),
+        "r": ParamSpec((H, 4, dh, dh), ("heads", None, "head_dim", None),
+                       "normal", dh ** -0.5, "float32"),
+        "b": ParamSpec((4, H, dh), (None, "heads", "head_dim"), "zeros",
+                       dtype="float32"),
+        "gn": {"scale": ParamSpec((d,), ("embed",), "ones", dtype=dt)},
+        "w_up": ParamSpec((d, 2 * ff), ("embed", "ffn"), "normal", s, dt),
+        "w_down": ParamSpec((ff, d), ("ffn", "embed"), "normal",
+                            ff ** -0.5, dt),
+    }
+
+
+def slstm_state_spec(cfg: ArchConfig, batch: int):
+    H, dh = slstm_dims(cfg)
+    f32 = jnp.dtype("float32")
+    return {
+        "h": jax.ShapeDtypeStruct((batch, H, dh), f32),
+        "c": jax.ShapeDtypeStruct((batch, H, dh), f32),
+        "n": jax.ShapeDtypeStruct((batch, H, dh), f32),
+        "m": jax.ShapeDtypeStruct((batch, H, dh), f32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1,
+                                      cfg.d_model), jnp.dtype(cfg.dtype)),
+    }
+
+
+def _slstm_cell(zx, r, state):
+    """zx: (B,4,H,dh) pre-activations from input; recurrent r: (H,4,dh,dh)."""
+    h, c, n, m = state
+    zr = jnp.einsum("bhe,hged->bghd", h, r)            # (B,4,H,dh)
+    zi, zf, zz, zo = [zx[:, g] + zr[:, g] for g in range(4)]
+    m_new = jnp.maximum(zf + m, zi)
+    i = jnp.exp(zi - m_new)
+    f = jnp.exp(zf + m - m_new)
+    c_new = f * c + i * jnp.tanh(zz)
+    n_new = jnp.maximum(f * n + i, 1e-6)
+    h_new = jax.nn.sigmoid(zo) * c_new / n_new
+    return h_new, (h_new, c_new, n_new, m_new)
+
+
+def _slstm_gates(p, xn, conv_state=None):
+    cz, new_conv = causal_conv1d(xn, p["conv"], conv_state)
+    cz = jax.nn.silu(cz).astype(jnp.float32)
+    zx = jnp.einsum("bsd,dghe->bsghe", cz, p["w"]) + p["b"]
+    return zx, new_conv                                 # (B,S,4,H,dh)
+
+
+def _slstm_out(p, h_seq, x, cfg):
+    """h_seq: (B,S,H,dh) -> residual (B,S,d)."""
+    B, S = h_seq.shape[:2]
+    hb = h_seq.reshape(B, S, -1).astype(x.dtype)
+    hb = norm_apply(p["gn"], hb, "rmsnorm")
+    u, g = jnp.split(dense(hb, p["w_up"]), 2, axis=-1)
+    return dense(jax.nn.gelu(g) * u, p["w_down"])
+
+
+def slstm_apply(p, x, cfg: ArchConfig, ctx: ModelContext):
+    """Full-sequence sLSTM block; the cell is inherently sequential."""
+    xn = norm_apply(p["ln"], x, cfg.norm)
+    zx, _ = _slstm_gates(p, xn)
+    B, S = x.shape[:2]
+    H, dh = slstm_dims(cfg)
+    z0 = jnp.zeros((B, H, dh), jnp.float32)
+    state0 = (z0, z0, jnp.full_like(z0, 1e-6), z0)
+    def step(state, z_t):
+        h_new, st = _slstm_cell(z_t, p["r"], state)
+        return st, h_new
+    _, hs = jax.lax.scan(step, state0, jnp.moveaxis(zx, 1, 0))
+    y = _slstm_out(p, jnp.moveaxis(hs, 0, 1), x, cfg)
+    y = ctx.constrain(y, ("batch", "seq", "embed"))
+    return x + y
+
+
+def slstm_decode(p, x1, state, cfg: ArchConfig, ctx: ModelContext):
+    xn = norm_apply(p["ln"], x1[:, None], cfg.norm)
+    zx, new_conv = _slstm_gates(p, xn, conv_state=state["conv"])
+    h_new, (h, c, n, m) = _slstm_cell(
+        zx[:, 0], p["r"], (state["h"], state["c"], state["n"], state["m"]))
+    y = _slstm_out(p, h_new[:, None], xn, cfg)[:, 0]
+    return x1 + y, {"h": h, "c": c, "n": n, "m": m, "conv": new_conv}

@@ -1,0 +1,81 @@
+"""AdamW with global-norm clipping, cosine schedule, and optional
+optimizer-state compression (m/v in bf16 — the distributed-optimization
+knob that lets kimi-k2-1t fit 512 x 16 GB; see EXPERIMENTS §Dry-run)."""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: object                     # pytree like params
+    v: object
+
+
+def adamw_init(params, state_dtype: str = "float32") -> AdamWState:
+    dt = jnp.dtype(state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def adamw_abstract_state(param_specs_or_params, state_dtype: str = "float32"):
+    dt = jnp.dtype(state_dtype)
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.dtype("int32")),
+                      m=jax.tree.map(sds, param_specs_or_params),
+                      v=jax.tree.map(sds, param_specs_or_params))
+
+
+def cosine_lr(step, *, peak_lr: float, warmup: int = 100,
+              total: int = 10000, min_frac: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * jnp.minimum(1.0, step / max(warmup, 1))
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, peak_lr * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, state: AdamWState, params, *,
+                 lr, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 clip_norm: Optional[float] = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if clip_norm is not None:
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+    step = state.step + 1
+    sf = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** sf
+    bc2 = 1.0 - b2 ** sf
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        mh = mf / bc1
+        vh = vf / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, AdamWState(step, new_m, new_v), metrics

@@ -1,0 +1,117 @@
+"""Serve-step factories: prefill and decode under a ComParX plan.
+
+Decode state sharding follows each segment's provider rules; KV caches of
+low-kv-head archs (granite kv=8, chatglm/starcoder kv=2 on a 16-way model
+axis) are sharded along the *sequence* dim with LSE-combining attention —
+the XLA path expresses this purely with sharding constraints.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.plan import Plan, build_contexts
+from repro.models.model import (SEG_EMBED, SEG_HEAD, cache_specs,
+                                decode_step, forward)
+from repro.models.rglru import rglru_dims  # noqa: F401  (docs reference)
+
+
+def cache_axes(cfg: ArchConfig):
+    """Logical axes mirroring ``models.model.cache_specs`` structure."""
+    def for_kind(kind: str):
+        if kind in ("attn", "attn_moe"):
+            a = ("batch", "kv_seq", "kv_heads", None)
+            return {"k": a, "v": a}
+        if kind == "rec":
+            return {"h": ("batch", "rnn"), "conv": ("batch", None, "rnn")}
+        if kind == "mlstm":
+            return {"C": ("batch", "heads", None, None),
+                    "n": ("batch", "heads", None),
+                    "m": ("batch", "heads"),
+                    "conv": ("batch", None, "rnn")}
+        if kind == "slstm":
+            return {"h": ("batch", "heads", None),
+                    "c": ("batch", "heads", None),
+                    "n": ("batch", "heads", None),
+                    "m": ("batch", "heads", None),
+                    "conv": ("batch", None, "embed")}
+        raise ValueError(kind)
+
+    axes = {}
+    for gi, group in enumerate(cfg.stack_plan()):
+        g = {}
+        for j, kind in enumerate(group.pattern):
+            ax = for_kind(kind)
+            if group.repeats > 1:
+                ax = jax.tree.map(
+                    lambda a: ("layers",) + tuple(a), ax,
+                    is_leaf=lambda x: isinstance(x, tuple))
+            g[f"b{j}"] = ax
+        axes[f"g{gi}"] = g
+    return axes
+
+
+def cache_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh, plan: Plan):
+    ctxs = build_contexts(cfg, mesh, plan)
+    axes = cache_axes(cfg)
+    specs = cache_specs(cfg, shape.global_batch, shape.seq_len)
+
+    out = {}
+    for seg, seg_axes in axes.items():
+        rules = ctxs[seg].rules
+        out[seg] = jax.tree.map(
+            lambda a, s: (NamedSharding(mesh, rules.pspec(a, s.shape))
+                          if mesh is not None else rules.pspec(a, s.shape)),
+            seg_axes, specs[seg],
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+    return out
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    B = shape.global_batch
+    return {"tokens": jax.ShapeDtypeStruct((B,), jnp.dtype("int32")),
+            "pos": jax.ShapeDtypeStruct((), jnp.dtype("int32"))}
+
+
+def make_decode_step(cfg: ArchConfig, mesh, plan: Plan, *,
+                     interpret: bool = True, greedy: bool = True):
+    """Returns (serve_step, shardings). serve_step:
+    (params, caches, tokens, pos) -> (next_tokens, logits, new_caches)."""
+    ctxs = build_contexts(cfg, mesh, plan, interpret=interpret)
+
+    def serve_step(params, caches, tokens, pos):
+        logits, new_caches = decode_step(params, caches, tokens, pos,
+                                         cfg, ctxs)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, new_caches
+
+    from repro.train.step import param_shardings
+    shardings = {"params": param_shardings(cfg, mesh, plan)}
+    return serve_step, shardings
+
+
+def make_prefill(cfg: ArchConfig, mesh, plan: Plan, *,
+                 interpret: bool = True):
+    """Full-sequence forward (prefill compute shape). Returns logits."""
+    ctxs = build_contexts(cfg, mesh, plan, interpret=interpret)
+
+    def prefill(params, batch):
+        logits, _ = forward(params, batch, cfg, ctxs)
+        return logits
+
+    from repro.train.step import param_shardings
+    return prefill, {"params": param_shardings(cfg, mesh, plan)}
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.dtype("int32")
+    if cfg.frontend != "none":
+        return {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.dtype(cfg.dtype))}
+    return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}

@@ -1,0 +1,153 @@
+"""Per-kernel allclose vs the pure-jnp oracle, swept over shapes/dtypes.
+
+All Pallas kernels run in interpret mode (CPU container; TPU is the
+compile target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.key(key), shape) * scale
+            ).astype(dtype)
+
+
+# --- flash attention ---------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,KV,S,D", [
+    (1, 4, 4, 128, 32),     # MHA
+    (2, 4, 2, 128, 32),     # GQA 2:1
+    (1, 8, 1, 256, 16),     # MQA
+])
+@pytest.mark.parametrize("window", [0, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_allclose(B, H, KV, S, D, window, dtype):
+    q = rand(1, (B, H, S, D), dtype)
+    k = rand(2, (B, KV, S, D), dtype)
+    v = rand(3, (B, KV, S, D), dtype)
+    from repro.kernels.flash_attention import flash_attention_fwd
+    out = flash_attention_fwd(q, k, v, causal=True, window=window,
+                              block_q=64, block_k=64, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_model_layout_and_grad():
+    B, S, H, KV, D = 1, 64, 4, 2, 16
+    q = rand(1, (B, S, H, D))
+    k = rand(2, (B, S, KV, D))
+    v = rand(3, (B, S, KV, D))
+    out = ops.flash_attention(q, k, v, block_q=32, block_k=32)
+    assert out.shape == (B, S, H, D)
+    g = jax.grad(lambda *a: ops.flash_attention(
+        *a, block_q=32, block_k=32).sum(), argnums=(0, 1, 2))(q, k, v)
+    for t in g:
+        assert not np.any(np.isnan(t))
+
+
+# --- flash decode ------------------------------------------------------------
+
+@pytest.mark.parametrize("pos", [0, 17, 255])
+@pytest.mark.parametrize("KV", [1, 2, 4])
+def test_flash_decode_allclose(pos, KV):
+    B, H, S, D = 2, 4, 256, 32
+    q = rand(1, (B, H, D))
+    k = rand(2, (B, S, KV, D))
+    v = rand(3, (B, S, KV, D))
+    out = ops.flash_decode(q, k, v, jnp.int32(pos), block_k=64)
+    expect = ref.flash_decode_ref(q, k, v, pos)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_decode_lse_combine():
+    """Seq-sharded decode: combining per-shard (out, lse) must equal the
+    unsharded result — the contract the serving path relies on."""
+    B, H, S, D = 1, 2, 128, 16
+    q = rand(1, (B, H, D))
+    k = rand(2, (B, S, 1, D))
+    v = rand(3, (B, S, 1, D))
+    pos = 127
+    full = ref.flash_decode_ref(q, k, v, pos)
+    # two shards of the sequence; shard 1 positions offset by S//2
+    o1, l1 = ops.flash_decode(q, k[:, :S // 2], v[:, :S // 2],
+                              jnp.int32(pos), block_k=32, return_lse=True)
+    o2, l2 = ops.flash_decode(q, k[:, S // 2:], v[:, S // 2:],
+                              jnp.int32(pos - S // 2), block_k=32,
+                              return_lse=True)
+    w1 = jnp.exp(l1 - jnp.logaddexp(l1, l2))[..., None]
+    combined = o1 * w1 + o2 * (1 - w1)
+    np.testing.assert_allclose(combined, full, atol=2e-5, rtol=2e-5)
+
+
+# --- rglru -------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,dr,chunk", [
+    (1, 64, 32, 16), (2, 128, 96, 64), (1, 100, 48, 32),  # odd S
+])
+def test_rglru_allclose(B, S, dr, chunk):
+    la = -jnp.abs(rand(1, (B, S, dr))) * 0.2
+    b = rand(2, (B, S, dr))
+    out = ops.rglru(la, b, chunk=chunk)
+    expect = ref.rglru_ref(la, b)
+    np.testing.assert_allclose(out, expect, atol=1e-5, rtol=1e-4)
+
+
+def test_rglru_grad():
+    la = -jnp.abs(rand(1, (1, 32, 8))) * 0.2
+    b = rand(2, (1, 32, 8))
+    g = jax.grad(lambda la, b: ops.rglru(la, b, chunk=16).sum(),
+                 argnums=(0, 1))(la, b)
+    ge = jax.grad(lambda la, b: ref.rglru_ref(la, b).sum(),
+                  argnums=(0, 1))(la, b)
+    for a, e in zip(g, ge):
+        np.testing.assert_allclose(a, e, atol=1e-4, rtol=1e-3)
+
+
+# --- mlstm -------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,S,dh,chunk", [
+    (1, 2, 64, 16, 16), (2, 2, 128, 32, 32), (1, 1, 96, 16, 32),
+])
+def test_mlstm_allclose(B, H, S, dh, chunk):
+    q = rand(1, (B, H, S, dh)) * dh ** -0.5
+    k = rand(2, (B, H, S, dh))
+    v = rand(3, (B, H, S, dh))
+    li = rand(4, (B, H, S))
+    lf = -jax.nn.softplus(-rand(5, (B, H, S)))
+    out = ops.mlstm_chunkwise(q, k, v, li, lf, chunk=chunk)
+    expect = ref.mlstm_ref(q, k, v, li, lf)
+    np.testing.assert_allclose(out, expect, atol=5e-4, rtol=5e-3)
+
+
+def test_mlstm_chunk_invariance():
+    """Chunk size is a pure performance knob — results must not change."""
+    B, H, S, dh = 1, 2, 64, 16
+    q = rand(1, (B, H, S, dh)) * dh ** -0.5
+    k = rand(2, (B, H, S, dh))
+    v = rand(3, (B, H, S, dh))
+    li = rand(4, (B, H, S))
+    lf = -jax.nn.softplus(-rand(5, (B, H, S)))
+    o16 = ops.mlstm_chunkwise(q, k, v, li, lf, chunk=16)
+    o64 = ops.mlstm_chunkwise(q, k, v, li, lf, chunk=64)
+    np.testing.assert_allclose(o16, o64, atol=5e-4, rtol=5e-3)
+
+
+# --- rmsnorm -----------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(32, 64), (128, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_allclose(shape, dtype):
+    x = rand(1, shape, dtype)
+    s = rand(2, shape[-1:])
+    out = ops.rmsnorm(x, s)
+    expect = ref.rmsnorm_ref(x, s)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)

@@ -1,0 +1,97 @@
+"""End-to-end ComParX tuner: sweep -> DB -> fuse, Continue-mode resume,
+validator black-box checks."""
+import jax
+import pytest
+
+from repro.configs import get_arch, get_shape
+from repro.core import ComParTuner, SweepDB
+from repro.core.combinator import Combination
+from repro.core.fusion import best_uniform
+from repro.core.validator import validate_combination, validate_plan
+from repro.core.plan import uniform_plan
+from repro.models.context import SegmentClause
+
+SPACE = {"remat": ("none",), "kernel": ("xla",), "block_q": (16,),
+         "block_k": (16,), "scan_unroll": (1,), "mlstm_chunk": (16,)}
+
+
+@pytest.fixture(scope="module")
+def swept():
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    db = SweepDB(":memory:")
+    tuner = ComParTuner(cfg, shape, mesh=None, db=db, project="t",
+                        mode="new", executor="dryrun", timeout_s=120)
+    plan, rep = tuner.sweep(providers=["tensor_par", "fsdp"],
+                            clause_space=SPACE, max_flags=1)
+    return cfg, shape, db, tuner, plan, rep
+
+
+def test_sweep_completes_and_fuses(swept):
+    cfg, shape, db, tuner, plan, rep = swept
+    assert rep.n_done > 0
+    assert rep.n_failed == 0
+    assert set(plan.segments) == {"embed", "g0", "head"}
+    assert rep.paper_count > rep.n_combinations  # formula is an upper bound
+
+
+def test_fused_plan_beats_or_equals_uniform_baselines(swept):
+    cfg, shape, db, tuner, plan, rep = swept
+    baselines = tuner.baselines()
+    assert baselines, "no uniform baseline found"
+    assert plan.meta["predicted_total_s"] <= min(baselines.values()) + 1e-12
+
+
+def test_continue_mode_skips_done(swept):
+    cfg, shape, db, tuner, plan, rep = swept
+    t2 = ComParTuner(cfg, shape, mesh=None, db=db, project="t",
+                     mode="continue", executor="dryrun")
+    import time
+    t0 = time.time()
+    plan2, rep2 = t2.sweep(providers=["tensor_par", "fsdp"],
+                           clause_space=SPACE, max_flags=1)
+    # everything cached -> near-instant and identical fusion
+    assert time.time() - t0 < 10.0
+    assert rep2.n_done == rep.n_done
+    assert plan2.segments == plan.segments
+
+
+def test_validator_accepts_real_combinations():
+    cfg = get_arch("recurrentgemma-2b").smoke()
+    ok, msg = validate_combination(
+        cfg, Combination("tensor_par", frozenset(),
+                         SegmentClause(remat="full", kernel="xla")))
+    assert ok, msg
+
+
+def test_validator_accepts_pallas_clause():
+    cfg = get_arch("recurrentgemma-2b").smoke()
+    ok, msg = validate_combination(
+        cfg, Combination("fsdp", frozenset(),
+                         SegmentClause(kernel="pallas", mlstm_chunk=16,
+                                       block_q=16, block_k=16)))
+    assert ok, msg
+
+
+def test_validator_rejects_broken_plan(monkeypatch):
+    """A combination whose execution diverges must be rejected (the
+    paper's black-box test).  We corrupt the forward pass only for
+    candidates whose clause says remat='full', then validate such a
+    candidate against the clean remat='none' reference."""
+    import repro.core.validator as V
+    cfg = get_arch("granite-8b").smoke()
+    real_forward = V.forward
+
+    def selectively_broken(params, batch, cfg_, ctxs):
+        logits, aux = real_forward(params, batch, cfg_, ctxs)
+        clauses = ([c.clause for c in ctxs.values()]
+                   if isinstance(ctxs, dict) else [ctxs.clause])
+        if any(c.remat == "full" for c in clauses):
+            logits = logits + 7.0          # corrupted numerics
+        return logits, aux
+
+    monkeypatch.setattr(V, "forward", selectively_broken)
+    plan_bad = uniform_plan(cfg, "fsdp",
+                            clause=SegmentClause(remat="full"))
+    ok, msg = V.validate_plan(cfg, plan_bad, reference=None)
+    assert not ok and "mismatch" in msg
