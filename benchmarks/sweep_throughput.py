@@ -1,0 +1,113 @@
+"""Sweep-engine throughput: the cost of the sweep itself.
+
+Measures combos/sec of three engine settings on one smoke registry config:
+
+  seed-style   workers=1, no cache, no prune, one commit per row
+  engine-cold  workers=N + structural sharing + prune + batched I/O,
+               empty persistent cache
+  engine-warm  same engine, second sweep against the populated cache
+               (must recompile NOTHING)
+
+Asserts the fused plans of all three runs are identical (the engine is an
+optimization, not an approximation) and reports speedups vs seed-style.
+
+  PYTHONPATH=src python benchmarks/sweep_throughput.py [--quick]
+      [--arch granite-8b] [--shape train_4k] [--workers N]
+      [--assert-speedup X]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import tempfile
+import time
+
+
+def _sweep(db, project, cfg, shape, space, **kw):
+    from repro.core.tuner import ComParTuner
+    tuner = ComParTuner(cfg, shape, mesh=None, db=db, project=project,
+                        mode="new", executor="dryrun", timeout_s=300)
+    t0 = time.perf_counter()
+    plan, rep = tuner.sweep(providers=["tensor_par", "fsdp", "hybrid2d"],
+                            clause_space=space, max_flags=1, **kw)
+    return plan, rep, time.perf_counter() - t0
+
+
+def run(quick: bool = False, arch: str = "granite-8b",
+        shape_name: str = "train_4k", workers: int = 0,
+        assert_speedup: float = 0.0):
+    from repro.configs import get_arch, get_shape
+    from repro.core.db import SweepDB
+
+    cfg = get_arch(arch).smoke()
+    shape = get_shape(shape_name).smoke()
+    workers = workers or min(8, os.cpu_count() or 1)
+    space = {"remat": ("none", "full"), "kernel": ("xla",),
+             "block_q": (16,), "block_k": (16,),
+             "scan_unroll": (1,), "mlstm_chunk": (16,)} if quick else \
+            {"remat": ("none", "dots", "full"), "kernel": ("xla",),
+             "block_q": (16, 32), "block_k": (16, 32),
+             "scan_unroll": (1,), "mlstm_chunk": (16,)}
+
+    tmp = tempfile.mkdtemp(prefix="sweep_bench_")
+    try:
+        # warm jax/compile caches once so the baseline isn't charged for
+        # first-touch initialization the engine runs would then skip
+        _sweep(SweepDB(":memory:"), "warmup", cfg, shape,
+               {k: (v[0],) for k, v in space.items()},
+               workers=1, use_cache=False, prune=False)
+
+        plan0, rep0, t_seed = _sweep(
+            SweepDB(os.path.join(tmp, "seed.db")), "seed", cfg, shape, space,
+            workers=1, use_cache=False, prune=False, share_scores=False,
+            record_batch=1)
+
+        db = SweepDB(os.path.join(tmp, "engine.db"))
+        plan1, rep1, t_cold = _sweep(
+            db, "cold", cfg, shape, space,
+            workers=workers, use_cache=True, prune=True)
+        plan2, rep2, t_warm = _sweep(
+            db, "warm", cfg, shape, space,
+            workers=workers, use_cache=True, prune=True)
+
+        assert plan1.segments == plan0.segments, "engine changed the plan!"
+        assert plan2.segments == plan0.segments, "warm sweep changed the plan!"
+        assert rep2.n_scored == 0, "warm sweep recompiled something"
+        assert rep2.n_cached == rep2.n_combinations, \
+            f"cache hits {rep2.n_cached} != combos {rep2.n_combinations}"
+
+        n = rep0.n_combinations
+        rows = [
+            ("seed-style", t_seed, rep0),
+            ("engine-cold", t_cold, rep1),
+            ("engine-warm", t_warm, rep2),
+        ]
+        print(f"# arch={cfg.name} shape={shape.name} combos={n} "
+              f"workers={workers} quick={quick}")
+        print("name,combos_per_s,seconds,scored,cached,pruned,speedup_vs_seed")
+        for name, t, rep in rows:
+            print(f"{name},{n / t:.1f},{t:.2f},{rep.n_scored},"
+                  f"{rep.n_cached},{rep.n_pruned},{t_seed / t:.2f}x")
+        if assert_speedup:
+            assert t_seed / t_cold >= assert_speedup, \
+                f"cold speedup {t_seed / t_cold:.2f}x < {assert_speedup}x"
+        return t_seed / t_cold, t_seed / t_warm
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--workers", type=int, default=0)
+    ap.add_argument("--assert-speedup", type=float, default=0.0)
+    args = ap.parse_args()
+    run(quick=args.quick, arch=args.arch, shape_name=args.shape,
+        workers=args.workers, assert_speedup=args.assert_speedup)
+
+
+if __name__ == "__main__":
+    main()

@@ -39,11 +39,13 @@ def main():
         os.remove(db_path)
     db = SweepDB(db_path)
 
-    # first run: New mode
+    # first run: New mode, with the sweep-engine knobs on (parallel
+    # scoring + exact lower-bound pruning; see docs/sweep_engine.md)
     tuner = ComParTuner(cfg, shape, mesh=None, db=db, project="json-demo",
                         mode="new", executor="dryrun")
     plan, rep = tuner.sweep(providers=providers, clause_space=clause_space,
-                            max_flags=1)
+                            max_flags=1, workers=os.cpu_count() or 1,
+                            prune=True)
     print("first run:", rep.summary())
 
     # second run: Continue mode — everything cached, near-instant

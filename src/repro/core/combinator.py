@@ -71,6 +71,37 @@ class Combination:
                    SegmentClause(**d["clause"]))
 
 
+def mapping_key(cfg, mesh, combo: "Combination", seg) -> str:
+    """Physical content of (provider, flags) for one segment: the resolved
+    logical->mesh mapping.  Two combinations whose providers resolve to the
+    same mapping build the same program.  Without a mesh every mapping is a
+    no-op (``Rules.constrain`` passes through, shardings are ``None``), so
+    all providers collapse to one key.
+    """
+    if mesh is None:
+        return "local"
+    from repro.core.providers import get_provider
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = get_provider(combo.provider).mapping(cfg, axis_sizes, combo.flags, seg)
+    blob = json.dumps({"axes": axis_sizes,
+                       "map": {k: m[k] for k in sorted(m)}},
+                      sort_keys=True, default=str)
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+def effective_cid(combo: "Combination", relevant: FrozenSet[str],
+                  map_key: str) -> str:
+    """The combination id *as seen by one segment's program*: only the
+    clause fields that reach the segment, plus the resolved mapping.
+    Combinations differing in irrelevant fields share one effective cid —
+    the structural-score-cache key component next to the segment
+    signature."""
+    cl = {f: getattr(combo.clause, f) for f in sorted(relevant)}
+    blob = json.dumps({"map": map_key, "clause": cl},
+                      sort_keys=True, default=str)
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
 @dataclass(frozen=True)
 class GlobalKnobs:
     """Program-wide knobs (ComPar's RTL-routine analogue)."""

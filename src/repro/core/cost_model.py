@@ -85,6 +85,67 @@ def terms_from_analysis(flops: float, bytes_accessed: float,
         bytes_per_device=bytes_per_device)
 
 
+# --- pruning lower bound -----------------------------------------------------
+#
+# ``combo_lower_bound`` is a *certified underestimate* of the score the
+# Executor would produce for (segment, combination): it counts only matmul
+# FLOPs that are guaranteed to appear as HLO ``dot`` ops (projection and
+# dense-FFN matmuls; attention score matmuls, MoE expert matmuls and
+# recurrent cells are deliberately omitted — omission keeps the bound
+# sound).  The sweep engine skips a combination whose bound already
+# exceeds the segment's incumbent best: since bound <= true score, a
+# pruned combination can never be the argmin, so pruning is exact.
+
+#: minimum fwd+bwd dot-FLOP multiple of the forward pass, per remat mode
+#: (bwd = dgrad + wgrad = 2x fwd dots; full remat re-runs the forward).
+REMAT_FLOP_MULT = {"none": 3.0, "dots": 3.0, "full": 4.0}
+
+
+def _block_fwd_flops_per_token(cfg: ArchConfig, kind: str) -> float:
+    """Guaranteed-present forward dot FLOPs per token for one block."""
+    if not kind.startswith("attn"):
+        return 0.0          # recurrent/xLSTM cells: conservatively omitted
+    d, dh = cfg.d_model, cfg.head_dim_
+    qo = 2.0 * d * cfg.num_heads * dh * 2       # wq + wo
+    kv = 2.0 * d * cfg.num_kv_heads * dh * 2    # wk + wv
+    ffn = 0.0
+    if kind == "attn" and cfg.d_ff:             # dense FFN (MoE: omitted)
+        ffn = (3 if cfg.glu else 2) * 2.0 * d * cfg.d_ff
+    return qo + kv + ffn
+
+
+def segment_forward_flops(cfg: ArchConfig, shape: ShapeConfig,
+                          segment) -> float:
+    """Lower bound on one forward pass's dot FLOPs through a segment."""
+    tokens = shape.global_batch if shape.kind == "decode" \
+        else shape.global_batch * shape.seq_len
+    if segment.kind == "embed":
+        return 0.0                               # a gather, not a dot
+    if segment.kind == "head":
+        return 2.0 * tokens * cfg.d_model * cfg.vocab_size
+    per_super = sum(_block_fwd_flops_per_token(cfg, k)
+                    for k in segment.pattern)
+    return tokens * per_super * segment.repeats
+
+
+def combo_lower_bound(cfg: ArchConfig, shape: ShapeConfig, segment,
+                      combo, n_chips: int = 1, hw: Hardware = V5E) -> float:
+    """Roofline lower bound (seconds) on scoring (segment, combination).
+
+    Uses only the compute term: the memory-traffic estimator in
+    ``runtime.hlo`` is not guaranteed to count parameter reads, so a
+    byte-based term could overshoot the true score and break exactness.
+    """
+    fwd = segment_forward_flops(cfg, shape, segment)
+    if shape.kind != "train":
+        mult = 1.0
+    elif segment.kind == "stack":               # remat wraps stack blocks only
+        mult = REMAT_FLOP_MULT.get(combo.clause.remat, 1.0)
+    else:
+        mult = 3.0                              # plain fwd + bwd
+    return fwd * mult / (n_chips * hw.peak_flops)
+
+
 # --- analytic MODEL_FLOPS (the "useful compute" yardstick) -------------------
 
 def active_params(cfg: ArchConfig) -> int:

@@ -25,18 +25,35 @@ CREATE TABLE IF NOT EXISTS combinations (
     segment TEXT,
     cid TEXT,
     spec TEXT,
-    status TEXT DEFAULT 'pending',   -- pending | done | failed | invalid
+    status TEXT DEFAULT 'pending',   -- pending | done | failed | invalid | pruned
     cost TEXT,
     error TEXT,
     updated REAL,
     PRIMARY KEY (project, segment, cid)
+);
+CREATE TABLE IF NOT EXISTS score_cache (
+    signature TEXT,                  -- Segment.signature(cfg, shape)
+    shape TEXT,                      -- shape content key
+    mesh TEXT,                       -- mesh content key ('local' = no mesh)
+    cid TEXT,                        -- effective combination id
+    status TEXT,                     -- done | failed
+    cost TEXT,
+    error TEXT,
+    created REAL,
+    PRIMARY KEY (signature, shape, mesh, cid)
 );
 """
 
 
 class SweepDB:
     def __init__(self, path: str = ":memory:"):
-        self.conn = sqlite3.connect(path)
+        # The sweep engine is the only writer; threads only read compiled
+        # artifacts, so a single shared connection is safe.
+        self.conn = sqlite3.connect(path, check_same_thread=False)
+        # WAL keeps readers off the writer's back on file-backed DBs and
+        # makes batched commits cheap; both pragmas are no-ops on :memory:.
+        self.conn.execute("PRAGMA journal_mode=WAL")
+        self.conn.execute("PRAGMA synchronous=NORMAL")
         self.conn.executescript(_SCHEMA)
         self.conn.commit()
 
@@ -80,11 +97,17 @@ class SweepDB:
 
     # --- combinations ------------------------------------------------------
     def register(self, project: str, segment: str, combo: Combination):
-        self.conn.execute(
+        self.register_many(project, [(segment, combo)])
+
+    def register_many(self, project: str,
+                      items: Iterable[Tuple[str, Combination]]):
+        """Register (segment, combination) rows in ONE transaction."""
+        now = time.time()
+        self.conn.executemany(
             "INSERT OR IGNORE INTO combinations "
             "(project, segment, cid, spec, updated) VALUES (?,?,?,?,?)",
-            (project, segment, combo.cid, json.dumps(combo.to_json()),
-             time.time()))
+            [(project, seg, c.cid, json.dumps(c.to_json()), now)
+             for seg, c in items])
         self.conn.commit()
 
     def status(self, project: str, segment: str, cid: str) -> Optional[str]:
@@ -94,24 +117,87 @@ class SweepDB:
         row = cur.fetchone()
         return row[0] if row else None
 
+    def statuses(self, project: str) -> Dict[Tuple[str, str], str]:
+        """All (segment, cid) -> status in one query (the resume check)."""
+        return {(seg, cid): st for seg, cid, st in self.conn.execute(
+            "SELECT segment, cid, status FROM combinations WHERE project=?",
+            (project,))}
+
     def record(self, project: str, segment: str, cid: str, *,
                status: str, cost: Optional[Dict] = None,
                error: str = ""):
-        self.conn.execute(
+        """Record a result for a REGISTERED combination; raises KeyError on
+        an unknown row instead of silently dropping the result (an UPDATE
+        that matches nothing)."""
+        self.record_many(project, [
+            {"segment": segment, "cid": cid, "status": status,
+             "cost": cost, "error": error}])
+
+    def record_many(self, project: str, rows: Iterable[Dict]):
+        """Record a batch of results in ONE transaction.
+
+        Each row: {"segment", "cid", "status", "cost"?, "error"?}.
+        Raises KeyError if any (segment, cid) was never registered.
+        """
+        rows = list(rows)
+        if not rows:
+            return
+        now = time.time()
+        cur = self.conn.executemany(
             "UPDATE combinations SET status=?, cost=?, error=?, updated=? "
             "WHERE project=? AND segment=? AND cid=?",
-            (status, json.dumps(cost or {}), error, time.time(),
-             project, segment, cid))
+            [(r["status"], json.dumps(r.get("cost") or {}),
+              r.get("error", ""), now, project, r["segment"], r["cid"])
+             for r in rows])
+        if cur.rowcount != len(rows):
+            self.conn.rollback()
+            known = self.statuses(project)
+            missing = [(r["segment"], r["cid"]) for r in rows
+                       if (r["segment"], r["cid"]) not in known]
+            raise KeyError(
+                f"record() for unregistered combination(s) in project "
+                f"{project!r}: {missing or 'duplicate rows in batch'}")
         self.conn.commit()
+
+    # --- cross-project structural score cache ------------------------------
+    def cache_get(self, signature: str, shape: str, mesh: str,
+                  cid: str) -> Optional[Dict]:
+        cur = self.conn.execute(
+            "SELECT status, cost, error FROM score_cache WHERE signature=? "
+            "AND shape=? AND mesh=? AND cid=?", (signature, shape, mesh, cid))
+        row = cur.fetchone()
+        if row is None:
+            return None
+        return {"status": row[0],
+                "cost": json.loads(row[1]) if row[1] else None,
+                "error": row[2]}
+
+    def cache_put_many(self, entries: Iterable[Dict]):
+        """entries: {"signature","shape","mesh","cid","status","cost"?,
+        "error"?} — one transaction."""
+        now = time.time()
+        self.conn.executemany(
+            "INSERT OR REPLACE INTO score_cache VALUES (?,?,?,?,?,?,?,?)",
+            [(e["signature"], e["shape"], e["mesh"], e["cid"], e["status"],
+              json.dumps(e.get("cost") or {}), e.get("error", ""), now)
+             for e in entries])
+        self.conn.commit()
+
+    def cache_size(self) -> int:
+        return self.conn.execute(
+            "SELECT COUNT(*) FROM score_cache").fetchone()[0]
 
     def results(self, project: str,
                 segment: Optional[str] = None) -> List[Dict]:
+        # ORDER BY rowid: registration order, so argmin tie-breaks are
+        # identical across sequential/parallel/cached sweeps.
         q = ("SELECT segment, cid, spec, status, cost, error "
              "FROM combinations WHERE project=?")
         args: Tuple = (project,)
         if segment is not None:
             q += " AND segment=?"
             args = (project, segment)
+        q += " ORDER BY rowid"
         out = []
         for seg, cid, spec, status, cost, error in self.conn.execute(q, args):
             out.append({"segment": seg, "cid": cid,

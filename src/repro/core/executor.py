@@ -12,16 +12,19 @@
 from __future__ import annotations
 
 import signal
+import threading
 import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from contextlib import contextmanager
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.combinator import Combination
-from repro.core.cost_model import CostTerms, Hardware, V5E
+from repro.core.cost_model import CostTerms, Hardware, V5E, combo_lower_bound
 from repro.core.segment import Segment
 from repro.core.timer import segment_program
 from repro.runtime.hlo import analyze_hlo
@@ -33,9 +36,30 @@ class CombinationFailed(Exception):
 
 @contextmanager
 def deadline(seconds: Optional[int]):
-    """SIGALRM-based straggler guard (single-threaded compile path)."""
+    """Straggler guard.
+
+    On the main thread: SIGALRM, which interrupts a hung compile.  Off the
+    main thread (the worker-pool path) ``signal`` is unavailable
+    (``ValueError: signal only works in main thread``), so we fall back to
+    a soft deadline: the block runs to completion and is *then* failed if
+    it overran — a straggler still becomes a recorded failure instead of a
+    silent sweep-blocker.
+    """
     if not seconds:
         yield
+        return
+
+    if threading.current_thread() is not threading.main_thread():
+        # CPU time, not wall: with N workers sharing cores (and the GIL
+        # during tracing), wall-clock would fail jobs at workers=N that
+        # pass at workers=1.  Thread CPU time stays ~constant under
+        # contention, keeping parallel and sequential sweeps in
+        # agreement; it is lenient for XLA's internal threads, which is
+        # the safe direction for a straggler guard.
+        t0 = time.thread_time()
+        yield
+        if time.thread_time() - t0 > seconds:
+            raise CombinationFailed(f"deadline {seconds}s exceeded (soft)")
         return
 
     def handler(signum, frame):
@@ -50,13 +74,25 @@ def deadline(seconds: Optional[int]):
         signal.signal(signal.SIGALRM, old)
 
 
+@contextmanager
+def _mesh_scope(mesh):
+    """jax.set_mesh when available (jax >= 0.6), else the Mesh context
+    manager — same effect for lowering under a mesh."""
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield
+    else:
+        with mesh:
+            yield
+
+
 def lower_and_compile(fn, args, shardings, mesh):
     kw = {}
     if mesh is not None and shardings is not None:
         kw["in_shardings"] = shardings
     jitted = jax.jit(fn, **kw)
     if mesh is not None:
-        with jax.set_mesh(mesh):
+        with _mesh_scope(mesh):
             lowered = jitted.lower(*args)
             compiled = lowered.compile()
     else:
@@ -81,6 +117,8 @@ def analyze_compiled(lowered, compiled, n_chips: int,
     res = analyze_hlo(hlo)
     f_pd, b_pd, c_pd = res["flops"], res["bytes"], res["collective"]
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):       # jax < 0.5: one dict per device
+        ca = ca[0] if ca else {}
     mem = {}
     try:
         ma = compiled.memory_analysis()
@@ -107,12 +145,21 @@ def analyze_compiled(lowered, compiled, n_chips: int,
 
 
 class DryRunExecutor:
+    #: analytic scoring: concurrent workers don't perturb each other
+    parallel_safe = True
+
     def __init__(self, mesh, hw: Hardware = V5E,
                  timeout_s: Optional[int] = 300):
         self.mesh = mesh
         self.hw = hw
         self.timeout_s = timeout_s
         self.n_chips = int(mesh.devices.size) if mesh is not None else 1
+
+    @property
+    def cache_tag(self) -> str:
+        """Score-cache identity: scores from different executors (or
+        hardware models) must never be served to each other."""
+        return f"dryrun:{self.hw.name}"
 
     def score_segment(self, cfg: ArchConfig, shape: ShapeConfig,
                       seg: Segment, combo: Combination) -> CostTerms:
@@ -132,12 +179,19 @@ class DryRunExecutor:
 class WallClockExecutor:
     """Empirical timing on the local device(s) — ComPar's measurement loop."""
 
+    #: concurrent timed runs contend on the device and corrupt medians
+    parallel_safe = False
+
     def __init__(self, mesh=None, repeats: int = 5,
                  timeout_s: Optional[int] = 120):
         self.mesh = mesh
         self.repeats = repeats
         self.timeout_s = timeout_s
         self.n_chips = int(mesh.devices.size) if mesh is not None else 1
+
+    @property
+    def cache_tag(self) -> str:
+        return f"wallclock:r{self.repeats}"
 
     def score_segment(self, cfg: ArchConfig, shape: ShapeConfig,
                       seg: Segment, combo: Combination) -> CostTerms:
@@ -166,6 +220,125 @@ class WallClockExecutor:
         t = CostTerms(compute_s=wall)
         t.detail["wall_s"] = wall
         return t
+
+
+# --- parallel, pruning sweep runner -----------------------------------------
+
+@dataclass
+class SweepJob:
+    """One *unique* program to score.  ``segments`` lists every segment
+    name whose (segment, combination) rows share this program — the tuner
+    fans the result back out to all of them."""
+    key: str
+    seg: Segment
+    combo: Combination
+    segments: Tuple[str, ...] = ()
+    bound_s: float = 0.0
+
+
+@dataclass
+class JobResult:
+    job: SweepJob
+    status: str                       # done | failed | pruned
+    cost: Optional[CostTerms] = None
+    error: str = ""
+
+
+class ParallelSweepRunner:
+    """Fan unique (segment, combination) programs across a thread pool.
+
+    * ``workers=1`` degrades to a plain in-thread loop (no pool overhead).
+    * With ``prune=True``, each job first compares its analytic roofline
+      lower bound (:func:`~repro.core.cost_model.combo_lower_bound`)
+      against the incumbent best score of every member segment; a job
+      whose bound already exceeds all incumbents is skipped as
+      ``pruned`` — exact, since bound <= true score (see cost_model).
+      Jobs are dispatched cheapest-bound-first so incumbents tighten
+      early.  ``prune_margin`` demands the bound exceed the incumbent by
+      a relative margin before pruning (safety headroom).
+    * Per-worker timeouts come from the wrapped executor's ``deadline``;
+      off the main thread that is a soft deadline (see :func:`deadline`).
+    """
+
+    def __init__(self, executor, cfg: ArchConfig, shape: ShapeConfig, *,
+                 workers: int = 1, prune: bool = False,
+                 prune_margin: float = 0.1):
+        self.executor = executor
+        self.cfg = cfg
+        self.shape = shape
+        self.workers = max(1, int(workers))
+        self.prune = prune
+        self.prune_margin = prune_margin
+        self._lock = threading.Lock()
+        self._incumbents: Dict[str, float] = {}
+
+    # ------------------------------------------------------------------
+    def _pruned(self, job: SweepJob) -> bool:
+        if not self.prune or job.bound_s <= 0.0 or not job.segments:
+            return False
+        with self._lock:
+            return all(
+                s in self._incumbents and
+                job.bound_s > self._incumbents[s] * (1.0 + self.prune_margin)
+                for s in job.segments)
+
+    def _observe(self, segments: Sequence[str], total_s: float):
+        with self._lock:
+            for s in segments:
+                cur = self._incumbents.get(s)
+                if cur is None or total_s < cur:
+                    self._incumbents[s] = total_s
+
+    def _run_job(self, job: SweepJob) -> JobResult:
+        if self._pruned(job):
+            return JobResult(job, "pruned",
+                             error=f"lower bound {job.bound_s:.3e}s > "
+                                   f"incumbent best")
+        try:
+            cost = self.executor.score_segment(
+                self.cfg, self.shape, job.seg, job.combo)
+        except CombinationFailed as e:
+            return JobResult(job, "failed", error=str(e))
+        except Exception as e:
+            # an analysis bug must fail the row, not abort the sweep (an
+            # escaping exception would drop the tuner's buffered batches)
+            return JobResult(job, "failed", error=f"{type(e).__name__}: {e}")
+        self._observe(job.segments, cost.total_s)
+        return JobResult(job, "done", cost=cost)
+
+    # ------------------------------------------------------------------
+    def run(self, jobs: Sequence[SweepJob],
+            incumbents: Optional[Dict[str, float]] = None
+            ) -> Iterator[JobResult]:
+        """Yield a :class:`JobResult` per job as each completes.
+
+        ``incumbents``: segment name -> best known total_s, used to seed
+        pruning (cache hits, Continue-mode rows)."""
+        if incumbents:
+            with self._lock:
+                for s, v in incumbents.items():
+                    cur = self._incumbents.get(s)
+                    if cur is None or v < cur:
+                        self._incumbents[s] = v
+        n_chips = getattr(self.executor, "n_chips", 1)
+        hw = getattr(self.executor, "hw", V5E)
+        for job in jobs:
+            job.bound_s = combo_lower_bound(
+                self.cfg, self.shape, job.seg, job.combo, n_chips, hw)
+        ordered = sorted(jobs, key=lambda j: (j.bound_s, j.key))
+
+        if self.workers == 1:
+            for job in ordered:
+                yield self._run_job(job)
+            return
+
+        with ThreadPoolExecutor(max_workers=self.workers) as pool:
+            pending = {pool.submit(self._run_job, j) for j in ordered}
+            while pending:
+                finished, pending = wait(pending,
+                                         return_when=FIRST_COMPLETED)
+                for fut in finished:
+                    yield fut.result()
 
 
 def _materialize(sds: jax.ShapeDtypeStruct):

@@ -8,10 +8,13 @@ tuning unit.
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
+import json
 from dataclasses import dataclass
-from typing import Tuple
+from typing import FrozenSet, Tuple
 
-from repro.configs.base import ArchConfig
+from repro.configs.base import ArchConfig, ShapeConfig
 
 
 @dataclass(frozen=True)
@@ -36,6 +39,48 @@ class Segment:
     @property
     def num_layers(self) -> int:
         return len(self.pattern) * self.repeats
+
+    # --- structural identity ------------------------------------------
+    def signature(self, cfg: ArchConfig, shape: ShapeConfig) -> str:
+        """Content signature of everything that reaches ``segment_program``
+        *besides* the combination: the segment's own structure plus the
+        arch/shape fields the program is built from.  Structurally
+        identical segments — same pattern/repeats under the same
+        arch+shape — share one signature and therefore one score.
+
+        ``cfg.name`` is deliberately excluded: two differently-named
+        configs with identical fields build identical programs.
+        """
+        arch = dataclasses.asdict(cfg)
+        arch.pop("name", None)
+        blob = json.dumps(
+            {"kind": self.kind, "pattern": list(self.pattern),
+             "repeats": self.repeats, "arch": arch,
+             "shape": {"kind": shape.kind, "seq_len": shape.seq_len,
+                       "global_batch": shape.global_batch}},
+            sort_keys=True, default=str)
+        return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+    def relevant_clause_fields(self, shape_kind: str) -> FrozenSet[str]:
+        """The SegmentClause fields that can alter this segment's program.
+
+        Deliberately over-inclusive (an extra field only costs cache
+        dedup, never correctness): embed/head segments consume no clause
+        fields at all; stack segments consume remat/scan_unroll plus the
+        per-block-kind kernel knobs.
+        """
+        if self.kind != "stack":
+            return frozenset()
+        fields = {"remat", "scan_unroll"}
+        if self.has_attn:
+            fields |= {"kernel", "block_q", "block_k"}
+            if shape_kind == "decode":
+                fields |= {"cache_upcast", "decode_shardmap"}
+        if self.has_moe:
+            fields.add("moe_dispatch")
+        if self.has_recurrent:
+            fields |= {"kernel", "mlstm_chunk"}
+        return frozenset(fields)
 
 
 def fragment(cfg: ArchConfig) -> Tuple[Segment, ...]:

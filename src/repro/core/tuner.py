@@ -3,22 +3,39 @@
 Fragmentor -> Combinator (-> DB register) -> Parallelizer+Executor per
 combination (-> DB record, Continue-mode resumable) -> black-box validation
 -> Optimal Plan Generator -> fused Plan.
+
+The sweep execution core is a parallel, cache-aware, pruning engine:
+
+* (segment, combination) rows that resolve to the *same program* — same
+  segment signature, same segment-relevant clause fields, same resolved
+  sharding mapping — are grouped and compiled once (structural score
+  sharing; with no mesh, all providers collapse per clause).
+* scored groups persist in a cross-project ``score_cache`` keyed by
+  ``(segment_signature, shape, mesh, effective_cid)``, so a repeated sweep
+  of the same config recompiles nothing.
+* an analytic roofline lower bound prunes combinations that provably
+  cannot beat a segment's incumbent best (exact — never changes the
+  argmin); pruned rows are recorded with status ``pruned``.
+* results are written in batched transactions (``record_many``) instead of
+  one commit per row.
 """
 from __future__ import annotations
 
+import hashlib
+import json
 import logging
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core.combinator import (Combination, GlobalKnobs,
-                                   enumerate_combinations,
+from repro.core.combinator import (Combination, GlobalKnobs, effective_cid,
+                                   enumerate_combinations, mapping_key,
                                    paper_combination_count)
 from repro.core.cost_model import CostTerms
 from repro.core.db import SweepDB
-from repro.core.executor import (CombinationFailed, DryRunExecutor,
-                                 WallClockExecutor)
+from repro.core.executor import (DryRunExecutor, ParallelSweepRunner,
+                                 SweepJob, WallClockExecutor)
 from repro.core.fusion import best_uniform, fuse
 from repro.core.plan import Plan
 from repro.core.providers import all_providers, get_provider
@@ -26,6 +43,23 @@ from repro.core.segment import Segment, fragment
 from repro.core.validator import validate_combination
 
 log = logging.getLogger("repro.tuner")
+
+#: statuses that Continue mode treats as settled (no re-run on resume)
+_SETTLED = ("done", "failed", "invalid", "pruned")
+
+
+def _shape_key(shape: ShapeConfig) -> str:
+    return f"{shape.kind}:{shape.seq_len}x{shape.global_batch}"
+
+
+def _mesh_key(mesh) -> str:
+    if mesh is None:
+        return "local"
+    dev = mesh.devices.flat[0]
+    blob = json.dumps({"axes": list(mesh.axis_names),
+                       "shape": [int(d) for d in mesh.devices.shape],
+                       "platform": str(getattr(dev, "platform", "?"))})
+    return hashlib.sha1(blob.encode()).hexdigest()[:12]
 
 
 @dataclass
@@ -35,6 +69,10 @@ class SweepReport:
     n_done: int = 0
     n_failed: int = 0
     n_invalid: int = 0
+    n_pruned: int = 0       # rows skipped by the exact lower-bound prune
+    n_scored: int = 0       # programs actually compiled+analyzed this run
+    n_cached: int = 0       # rows served from the persistent score cache
+    n_shared: int = 0       # rows that shared an in-run score (beyond rep.)
     paper_count: int = 0
     elapsed_s: float = 0.0
     per_segment: Dict[str, List[Tuple[Combination, CostTerms]]] = \
@@ -43,9 +81,25 @@ class SweepReport:
     def summary(self) -> str:
         return (f"project={self.project} combos={self.n_combinations} "
                 f"done={self.n_done} failed={self.n_failed} "
-                f"invalid={self.n_invalid} "
+                f"invalid={self.n_invalid} pruned={self.n_pruned} "
+                f"scored={self.n_scored} cached={self.n_cached} "
+                f"shared={self.n_shared} "
                 f"paper_formula_upper_bound={self.paper_count} "
                 f"elapsed={self.elapsed_s:.1f}s")
+
+
+@dataclass
+class _Group:
+    """All pending (segment, cid) rows that share one program."""
+    seg: Segment
+    combo: Combination
+    signature: str
+    eff_cid: str
+    members: List[Tuple[str, str]] = field(default_factory=list)
+
+    @property
+    def segment_names(self) -> Tuple[str, ...]:
+        return tuple(sorted({s for s, _ in self.members}))
 
 
 class ComParTuner:
@@ -73,8 +127,41 @@ class ComParTuner:
               clause_space=None, *, budget: Optional[int] = None,
               knobs: GlobalKnobs = GlobalKnobs(),
               boundary_costs: bool = False,
-              max_flags: Optional[int] = None) -> Tuple[Plan, SweepReport]:
+              max_flags: Optional[int] = None,
+              workers: int = 1,
+              prune: bool = False, prune_margin: float = 0.1,
+              use_cache: bool = True, share_scores: bool = True,
+              record_batch: int = 64) -> Tuple[Plan, SweepReport]:
+        """Run the sweep.  Engine knobs (see docs/sweep_engine.md):
+
+        ``workers``       worker threads scoring unique programs
+        ``prune``         exact lower-bound pruning on/off
+        ``prune_margin``  relative headroom the bound must clear
+        ``use_cache``     persistent structural score cache on/off
+        ``share_scores``  group structurally identical rows into one
+                          compile (off = one compile per row, the
+                          pre-engine behavior — benchmark baseline)
+        ``record_batch``  DB rows per write transaction
+        """
         t0 = time.time()
+        if prune and boundary_costs:
+            # the lower-bound certificate covers the per-segment argmin
+            # only; under Viterbi fusion a locally-dominated combination
+            # can still win via cheaper boundary transitions
+            log.warning("prune disabled: exactness doesn't extend to "
+                        "boundary-cost (Viterbi) fusion")
+            prune = False
+        if workers > 1 and not getattr(self.executor, "parallel_safe", True):
+            log.warning("workers=%d -> 1: %s timings would contend on the "
+                        "device", workers, type(self.executor).__name__)
+            workers = 1
+        if prune and not hasattr(self.executor, "hw"):
+            # the bound divides by the analytic hw model's peak; against an
+            # executor measuring real wall seconds on unknown hardware the
+            # certificate (bound <= score) no longer holds
+            log.warning("prune disabled: %s has no hardware model",
+                        type(self.executor).__name__)
+            prune = False
         providers = list(providers or all_providers())
         segs = fragment(self.cfg)
         combos = enumerate_combinations(providers, clause_space,
@@ -86,23 +173,21 @@ class ComParTuner:
                 n_rtl=len(vars(knobs)),
                 n_d=len(clause_space or {}) or 6))
 
-        # Combinator: register every (segment, combination) in the DB
+        # Combinator: register every (segment, combination), one transaction
         per_seg_combos: Dict[str, List[Combination]] = {}
+        reg: List[Tuple[str, Combination]] = []
         for seg in segs:
             cs = [c for c in combos
                   if get_provider(c.provider).applicable(self.cfg, seg)]
             per_seg_combos[seg.name] = cs
             rep.n_combinations += len(cs)
-            for c in cs:
-                self.db.register(self.project, seg.name, c)
+            reg.extend((seg.name, c) for c in cs)
+        self.db.register_many(self.project, reg)
 
-        # Executor: score everything not already done (Continue mode)
-        for seg in segs:
-            for c in per_seg_combos[seg.name]:
-                st = self.db.status(self.project, seg.name, c.cid)
-                if st in ("done", "failed", "invalid"):
-                    continue
-                self._run_one(seg, c, rep)
+        self._execute(segs, per_seg_combos, rep,
+                      workers=workers, prune=prune,
+                      prune_margin=prune_margin, use_cache=use_cache,
+                      share_scores=share_scores, record_batch=record_batch)
 
         # collect valid results
         for seg in segs:
@@ -114,6 +199,7 @@ class ComParTuner:
         rep.n_done = counts.get("done", 0)
         rep.n_failed = counts.get("failed", 0)
         rep.n_invalid = counts.get("invalid", 0)
+        rep.n_pruned = counts.get("pruned", 0)
 
         plan = fuse(self.cfg, self.shape, self.mesh, rep.per_segment,
                     knobs, boundary_costs=boundary_costs)
@@ -122,21 +208,116 @@ class ComParTuner:
         log.info(rep.summary())
         return plan, rep
 
-    def _run_one(self, seg: Segment, c: Combination, rep: SweepReport):
-        if self.validate:
-            ok, msg = validate_combination(self.cfg, c)
-            if not ok:
-                self.db.record(self.project, seg.name, c.cid,
-                               status="invalid", error=msg)
-                return
-        try:
-            cost = self.executor.score_segment(self.cfg, self.shape, seg, c)
-        except CombinationFailed as e:
-            self.db.record(self.project, seg.name, c.cid,
-                           status="failed", error=str(e))
-            return
-        self.db.record(self.project, seg.name, c.cid, status="done",
-                       cost=cost.as_dict())
+    # ------------------------------------------------------------------
+    def _execute(self, segs: Sequence[Segment],
+                 per_seg_combos: Dict[str, List[Combination]],
+                 rep: SweepReport, *, workers: int, prune: bool,
+                 prune_margin: float, use_cache: bool, share_scores: bool,
+                 record_batch: int):
+        """Score everything not already settled (Continue mode)."""
+        statuses = self.db.statuses(self.project)
+        shape_key = _shape_key(self.shape)
+        # the mesh column doubles as the execution-environment key: scores
+        # from a different executor or hardware model are not interchangeable
+        mesh_key = (f"{_mesh_key(self.mesh)}/"
+                    f"{getattr(self.executor, 'cache_tag', 'unknown')}")
+
+        # incumbent best per segment, seeded from prior rows (resume)
+        incumbents: Dict[str, float] = {}
+        for r in self.db.results(self.project):
+            if r["status"] == "done" and r["cost"]:
+                t = CostTerms.from_dict(r["cost"]).total_s
+                cur = incumbents.get(r["segment"])
+                if cur is None or t < cur:
+                    incumbents[r["segment"]] = t
+
+        # group pending rows by structural program identity
+        groups: Dict[str, _Group] = {}
+        pending_records: List[Dict] = []
+        valid_memo: Dict[str, Tuple[bool, str]] = {}
+        for seg in segs:
+            sig = seg.signature(self.cfg, self.shape)
+            relevant = seg.relevant_clause_fields(self.shape.kind)
+            for c in per_seg_combos[seg.name]:
+                if statuses.get((seg.name, c.cid)) in _SETTLED:
+                    continue
+                if self.validate:
+                    if c.cid not in valid_memo:
+                        valid_memo[c.cid] = validate_combination(self.cfg, c)
+                    ok, msg = valid_memo[c.cid]
+                    if not ok:
+                        pending_records.append(
+                            {"segment": seg.name, "cid": c.cid,
+                             "status": "invalid", "error": msg})
+                        continue
+                ec = effective_cid(
+                    c, relevant, mapping_key(self.cfg, self.mesh, c, seg))
+                key = f"{sig}/{ec}" if share_scores \
+                    else f"{seg.name}/{c.cid}"
+                g = groups.setdefault(key, _Group(seg, c, sig, ec))
+                g.members.append((seg.name, c.cid))
+
+        # persistent cache stage: resolve whole groups without compiling
+        jobs: List[SweepJob] = []
+        for key, g in groups.items():
+            hit = self.db.cache_get(g.signature, shape_key, mesh_key,
+                                    g.eff_cid) if use_cache else None
+            if hit is not None:
+                rep.n_cached += len(g.members)
+                for sname, cid in g.members:
+                    pending_records.append(
+                        {"segment": sname, "cid": cid,
+                         "status": hit["status"], "cost": hit["cost"],
+                         "error": hit["error"]})
+                if hit["status"] == "done" and hit["cost"]:
+                    t = CostTerms.from_dict(hit["cost"]).total_s
+                    for sname in g.segment_names:
+                        if t < incumbents.get(sname, float("inf")):
+                            incumbents[sname] = t
+                continue
+            jobs.append(SweepJob(key, g.seg, g.combo,
+                                 segments=g.segment_names))
+        self.db.record_many(self.project, pending_records)
+        pending_records = []
+
+        # runner stage: compile+score unique programs, fan results out
+        runner = ParallelSweepRunner(
+            self.executor, self.cfg, self.shape, workers=workers,
+            prune=prune, prune_margin=prune_margin)
+        cache_entries: List[Dict] = []
+        for res in runner.run(jobs, incumbents=incumbents):
+            g = groups[res.job.key]
+            cost_d = res.cost.as_dict() if res.cost is not None else None
+            for sname, cid in g.members:
+                pending_records.append(
+                    {"segment": sname, "cid": cid, "status": res.status,
+                     "cost": cost_d, "error": res.error})
+            if res.status == "pruned":
+                rep.n_pruned += len(g.members)
+            else:
+                rep.n_scored += 1
+                rep.n_shared += len(g.members) - 1
+                # pruned outcomes are project-relative (they depend on the
+                # incumbent) and must NOT be cached; neither are deadline
+                # failures, which depend on machine load / timeout_s — a
+                # bigger budget must be able to retry them.  Lowering and
+                # sharding failures ARE deterministic and cacheable.
+                if use_cache and not (res.status == "failed"
+                                      and "deadline" in res.error):
+                    cache_entries.append(
+                        {"signature": g.signature, "shape": shape_key,
+                         "mesh": mesh_key, "cid": g.eff_cid,
+                         "status": res.status, "cost": cost_d,
+                         "error": res.error})
+            if len(pending_records) >= record_batch:
+                self.db.record_many(self.project, pending_records)
+                pending_records = []
+                if use_cache and cache_entries:
+                    self.db.cache_put_many(cache_entries)
+                    cache_entries = []
+        self.db.record_many(self.project, pending_records)
+        if use_cache and cache_entries:
+            self.db.cache_put_many(cache_entries)
 
     # ------------------------------------------------------------------
     def baselines(self, knobs: GlobalKnobs = GlobalKnobs()):

@@ -82,7 +82,8 @@ def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
                                   make_decode_step, make_prefill,
                                   prefill_input_specs)
 
-    with jax.set_mesh(mesh):
+    from repro.core.executor import _mesh_scope
+    with _mesh_scope(mesh):
         if shape.kind == "train":
             step, sh = make_train_step(cfg, mesh, plan, interpret=False)
             params, opt = abstract_train_state(cfg, plan)

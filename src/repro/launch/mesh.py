@@ -9,17 +9,24 @@ the property that scales the design past 1000 nodes.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                    # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:                     # older jax: meshes are Auto-typed
+    AxisType = None
 
 
-def _auto(n):
-    return (AxisType.Auto,) * n
+def _mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 1, model: int = 1):
@@ -27,8 +34,7 @@ def make_test_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = min(model, max(1, n // data))
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return _mesh((data, model), ("data", "model"))
 
 
 def mesh_chips(mesh) -> int:

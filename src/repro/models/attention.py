@@ -197,8 +197,9 @@ def attn_decode_shardmap(q, k, v, cache, pos, ctx: ModelContext):
     the same combine contract as the Pallas flash-decode kernel's LSE
     output (tests/test_kernels.py::test_flash_decode_lse_combine).
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.runtime.sharding import shard_map_compat
 
     mesh = ctx.rules.mesh
     axis_sizes = ctx.rules.axis_sizes
@@ -244,12 +245,12 @@ def attn_decode_shardmap(q, k, v, cache, pos, ctx: ModelContext):
         return o.reshape(q.shape[0], H, D).astype(q.dtype), ck, cv
 
     cache_spec = P(b_ax, "model", None, None)
-    o, ck, cv = shard_map(
+    o, ck, cv = shard_map_compat(
         local, mesh=mesh,
         in_specs=(P(b_ax, None, None), P(b_ax, None, None),
                   P(b_ax, None, None), cache_spec, cache_spec, P()),
         out_specs=(P(b_ax, None, None), cache_spec, cache_spec),
-        check_vma=False,
+        check=False,
     )(q, k, v, cache["k"], cache["v"], pos)
     return o, {"k": ck, "v": cv}
 

@@ -116,6 +116,31 @@ def _split_computations(text: str) -> Dict[str, List[str]]:
     return comps
 
 
+def _split_operands(s: str) -> List[str]:
+    """Split an operand list on top-level commas only: shapes and tuple
+    types carry internal commas (``f32[64,128]{1,0} %x``), and older XLA
+    prints operands with their full types inline."""
+    out: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in s:
+        if ch in "[({":
+            depth += 1
+        elif ch in "])}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            tok = "".join(cur).strip()
+            if tok:
+                out.append(tok)
+            cur = []
+            continue
+        cur.append(ch)
+    tok = "".join(cur).strip()
+    if tok:
+        out.append(tok)
+    return out
+
+
 def _dot_flops(line: str, shapes: Dict[str, str]) -> float:
     # result shape = first shape on the line (the def type)
     res = _shapes_in(line.split(" dot(")[0])
@@ -125,7 +150,7 @@ def _dot_flops(line: str, shapes: Dict[str, str]) -> float:
     m = _OPERANDS_RE.search(line[line.index(" dot(") + 4:])
     lhs_shape = None
     if m:
-        ops = [o.strip() for o in m.group(1).split(",")]
+        ops = _split_operands(m.group(1))
         if ops:
             name = ops[0].split(" ")[-1].lstrip("%")
             if name in shapes:
@@ -185,8 +210,8 @@ def analyze_hlo(text: str) -> Dict[str, float]:
         m = _OPERANDS_RE.search(line[i + len(op) + 1:])
         if not m:
             return []
-        return [t.strip().split(" ")[-1].lstrip("%")
-                for t in m.group(1).split(",") if t.strip()]
+        return [t.split(" ")[-1].lstrip("%")
+                for t in _split_operands(m.group(1))]
 
     # true update-slice bytes of dus-rooted computations (a dus FUSION's
     # own operands include captured full buffers — look inside instead)
@@ -213,8 +238,8 @@ def analyze_hlo(text: str) -> Dict[str, float]:
         m = _OPERANDS_RE.search(line[i + len(op) + 1:])
         if not m:
             return []
-        return [t.strip().split(" ")[-1].lstrip("%")
-                for t in m.group(1).split(",") if t.strip()]
+        return [t.split(" ")[-1].lstrip("%")
+                for t in _split_operands(m.group(1))]
 
     for name, lines in comps_lines.items():
         c = _Comp(name)

@@ -1,0 +1,73 @@
+"""Deterministic mini-fallback for ``hypothesis`` (not installed in the
+runtime container).
+
+Implements just the surface the test suite uses — ``given`` / ``settings``
+/ ``strategies.{integers,floats,lists,composite}`` — by drawing a fixed
+number of seeded pseudo-random examples per test.  Property coverage is
+weaker than real hypothesis (no shrinking, no edge-case bias), but the
+properties still execute instead of the whole module failing to import.
+"""
+from __future__ import annotations
+
+import random
+
+
+class Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 16):
+        return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def lists(elements: Strategy, min_size=0, max_size=10):
+        return Strategy(lambda rng: [
+            elements.example(rng)
+            for _ in range(rng.randint(min_size, max_size))])
+
+    @staticmethod
+    def composite(fn):
+        def builder(*args, **kwargs):
+            def draw_with(rng):
+                return fn(lambda s: s.example(rng), *args, **kwargs)
+            return Strategy(draw_with)
+        return builder
+
+
+strategies = _Strategies()
+
+_DEFAULT_EXAMPLES = 20
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: Strategy):
+    def deco(fn):
+        def wrapper():
+            # NOT functools.wraps: pytest would follow __wrapped__ to the
+            # original signature and demand fixtures for the drawn args.
+            n = getattr(fn, "_compat_max_examples", _DEFAULT_EXAMPLES)
+            rng = random.Random(0)
+            for _ in range(n):
+                fn(*(s.example(rng) for s in strats))
+        for attr in ("__name__", "__qualname__", "__doc__", "__module__",
+                     "pytestmark"):
+            if hasattr(fn, attr):
+                setattr(wrapper, attr, getattr(fn, attr))
+        return wrapper
+    return deco

@@ -3,7 +3,11 @@ fusion guarantee — with hypothesis property tests."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:        # container lacks hypothesis: deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_arch, get_shape
 from repro.core.combinator import (Combination, GlobalKnobs, clause_grid,

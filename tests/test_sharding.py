@@ -4,7 +4,10 @@ from dataclasses import dataclass
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:        # container lacks hypothesis: deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_arch

@@ -1,0 +1,340 @@
+"""The parallel / cached / pruned sweep engine.
+
+Invariants: parallel == sequential, cached == fresh (identical CostTerms,
+zero recompiles), pruning never changes the fused plan, Continue mode
+resumes without recompiling, and the DB/deadline satellite fixes hold.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.configs import get_arch, get_shape
+from repro.core import ComParTuner, SweepDB
+from repro.core.combinator import Combination
+from repro.core.cost_model import CostTerms, combo_lower_bound
+from repro.core.executor import CombinationFailed, deadline
+from repro.core.segment import Segment, fragment
+from repro.models.context import SegmentClause
+
+SPACE = {"remat": ("none", "full"), "kernel": ("xla",), "block_q": (16, 32),
+         "block_k": (16,), "scan_unroll": (1,), "mlstm_chunk": (16,)}
+
+
+def _tuner(db, project, mode="new", **kw):
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    return ComParTuner(cfg, shape, mesh=None, db=db, project=project,
+                       mode=mode, executor="dryrun", timeout_s=120), cfg, shape
+
+
+def _sweep(tuner, **kw):
+    return tuner.sweep(providers=["tensor_par", "fsdp"], clause_space=SPACE,
+                       max_flags=1, **kw)
+
+
+@pytest.fixture(scope="module")
+def sequential():
+    db = SweepDB(":memory:")
+    tuner, cfg, shape = _tuner(db, "seq")
+    plan, rep = _sweep(tuner, workers=1, use_cache=False, prune=False)
+    return plan, rep
+
+
+def test_parallel_agrees_with_sequential(sequential):
+    plan_seq, rep_seq = sequential
+    db = SweepDB(":memory:")
+    tuner, _, _ = _tuner(db, "par")
+    plan_par, rep_par = _sweep(tuner, workers=4, use_cache=False, prune=False)
+    assert plan_par.segments == plan_seq.segments
+    assert rep_par.n_done == rep_seq.n_done
+    assert rep_par.n_failed == rep_seq.n_failed == 0
+
+
+def test_structural_sharing_compiles_unique_programs_once(sequential):
+    _, rep = sequential
+    # with no mesh all providers/flags collapse per segment-relevant clause:
+    # far fewer compiles than rows, and every row still gets a result
+    assert rep.n_scored < rep.n_combinations
+    assert rep.n_scored + rep.n_shared == rep.n_done
+
+
+def test_cache_hits_return_identical_costterms(sequential, tmp_path):
+    plan1, rep1 = sequential
+    db = SweepDB(str(tmp_path / "sweep.db"))
+    t1, _, _ = _tuner(db, "c1")
+    plan_a, rep_a = _sweep(t1, use_cache=True)
+    assert rep_a.n_cached == 0
+    t2, _, _ = _tuner(db, "c2")
+    plan_b, rep_b = _sweep(t2, use_cache=True)
+    # second sweep of the same config recompiles NOTHING
+    assert rep_b.n_scored == 0
+    assert rep_b.n_cached == rep_b.n_combinations
+    assert plan_b.segments == plan_a.segments == plan1.segments
+    # identical CostTerms row-for-row
+    rows_a = {(r["segment"], r["cid"]): r["cost"]
+              for r in db.results("c1") if r["status"] == "done"}
+    rows_b = {(r["segment"], r["cid"]): r["cost"]
+              for r in db.results("c2") if r["status"] == "done"}
+    assert rows_a.keys() == rows_b.keys() and len(rows_a) > 0
+    for k, cost in rows_a.items():
+        assert CostTerms.from_dict(cost).as_dict() == \
+            CostTerms.from_dict(rows_b[k]).as_dict()
+
+
+def test_cache_survives_reopen(tmp_path):
+    path = str(tmp_path / "sweep.db")
+    t1, _, _ = _tuner(SweepDB(path), "p1")
+    _sweep(t1, use_cache=True)
+    t2, _, _ = _tuner(SweepDB(path), "p2")   # fresh connection
+    _, rep = _sweep(t2, use_cache=True)
+    assert rep.n_scored == 0
+    assert rep.n_cached == rep.n_combinations
+
+
+def test_pruning_never_changes_the_plan(sequential):
+    plan_seq, rep_seq = sequential
+    db = SweepDB(":memory:")
+    tuner, _, _ = _tuner(db, "pr")
+    plan_pr, rep_pr = _sweep(tuner, workers=2, use_cache=False, prune=True,
+                             prune_margin=0.0)
+    assert plan_pr.segments == plan_seq.segments
+    # every registered row is settled one way or another
+    assert (rep_pr.n_done + rep_pr.n_failed + rep_pr.n_pruned
+            == rep_pr.n_combinations)
+
+
+def test_continue_mode_resumes_without_recompiling():
+    db = SweepDB(":memory:")
+    t1, _, _ = _tuner(db, "r", mode="new")
+    plan1, rep1 = _sweep(t1, use_cache=False)
+    assert rep1.n_scored > 0
+    t2, _, _ = _tuner(db, "r", mode="continue")
+    plan2, rep2 = _sweep(t2, use_cache=False)
+    assert rep2.n_scored == 0            # all rows settled -> nothing to do
+    assert rep2.n_done == rep1.n_done
+    assert plan2.segments == plan1.segments
+
+
+def test_lower_bound_is_below_measured_score(sequential):
+    """The pruning certificate: bound <= true score for every scored row."""
+    _, rep = sequential
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    segs = {s.name: s for s in fragment(cfg)}
+    checked = 0
+    for sname, rows in rep.per_segment.items():
+        for combo, cost in rows:
+            lb = combo_lower_bound(cfg, shape, segs[sname], combo)
+            assert lb <= cost.total_s + 1e-12, (sname, combo.label())
+            checked += 1
+    assert checked > 0
+
+
+def test_segment_signature_structural_identity():
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    a = Segment("g0", "stack", ("attn",), 2)
+    b = Segment("g7", "stack", ("attn",), 2)      # same structure, new name
+    c = Segment("g1", "stack", ("attn", "rec"), 2)
+    assert a.signature(cfg, shape) == b.signature(cfg, shape)
+    assert a.signature(cfg, shape) != c.signature(cfg, shape)
+    # arch name is excluded; arch *fields* are not
+    import dataclasses
+    renamed = dataclasses.replace(cfg, name="other")
+    wider = dataclasses.replace(cfg, d_model=cfg.d_model * 2)
+    assert a.signature(renamed, shape) == a.signature(cfg, shape)
+    assert a.signature(wider, shape) != a.signature(cfg, shape)
+
+
+def test_relevant_clause_fields():
+    embed = Segment("embed", "embed")
+    head = Segment("head", "head")
+    attn = Segment("g0", "stack", ("attn",), 2)
+    moe = Segment("g0", "stack", ("attn_moe",), 2)
+    rec = Segment("g0", "stack", ("rec",), 2)
+    assert embed.relevant_clause_fields("train") == frozenset()
+    assert head.relevant_clause_fields("train") == frozenset()
+    assert {"remat", "kernel", "block_q"} <= attn.relevant_clause_fields("train")
+    assert "cache_upcast" in attn.relevant_clause_fields("decode")
+    assert "cache_upcast" not in attn.relevant_clause_fields("train")
+    assert "moe_dispatch" in moe.relevant_clause_fields("train")
+    assert "mlstm_chunk" in rec.relevant_clause_fields("train")
+
+
+def test_irrelevant_clause_fields_share_scores(sequential):
+    """Exactness of the projection: head-segment scores must be identical
+    across combos that differ only in stack-only clause fields."""
+    _, rep = sequential
+    head_rows = rep.per_segment["head"]
+    totals = {c.cid: t.total_s for c, t in head_rows}
+    assert len(totals) > 1
+    assert len(set(totals.values())) == 1
+
+
+def test_cache_is_keyed_by_executor(tmp_path):
+    """Analytic dry-run scores must never be served to a wall-clock sweep
+    sharing the same DB file (and vice versa)."""
+    db = SweepDB(str(tmp_path / "sweep.db"))
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    space = {"remat": ("none",), "kernel": ("xla",), "block_q": (16,),
+             "block_k": (16,), "scan_unroll": (1,), "mlstm_chunk": (16,)}
+    t1 = ComParTuner(cfg, shape, mesh=None, db=db, project="dry",
+                     mode="new", executor="dryrun", timeout_s=120)
+    t1.sweep(providers=["fsdp"], clause_space=space, max_flags=0)
+    t2 = ComParTuner(cfg, shape, mesh=None, db=db, project="wall",
+                     mode="new", executor="wallclock", timeout_s=120)
+    _, rep = t2.sweep(providers=["fsdp"], clause_space=space, max_flags=0)
+    assert rep.n_cached == 0 and rep.n_scored > 0
+
+
+def test_prune_disabled_under_boundary_cost_fusion():
+    """The lower-bound certificate covers per-segment argmin only; under
+    Viterbi fusion pruning must be switched off."""
+    db = SweepDB(":memory:")
+    tuner, _, _ = _tuner(db, "bc")
+    plan, rep = _sweep(tuner, prune=True, boundary_costs=True,
+                       use_cache=False)
+    assert rep.n_pruned == 0
+    assert plan.meta["fusion"] == "viterbi-boundary"
+
+
+def test_wallclock_clamps_workers(monkeypatch):
+    """Concurrent timed runs contend on the device: a wallclock sweep must
+    run its measurements sequentially even if workers>1 is requested."""
+    from repro.core import executor as E
+    seen = {}
+    orig = E.ParallelSweepRunner.__init__
+
+    def spy(self, ex, cfg, shape, *, workers=1, **kw):
+        seen["workers"] = workers
+        orig(self, ex, cfg, shape, workers=workers, **kw)
+
+    monkeypatch.setattr(E.ParallelSweepRunner, "__init__", spy)
+    import repro.core.tuner as T
+    monkeypatch.setattr(T, "ParallelSweepRunner", E.ParallelSweepRunner)
+    db = SweepDB(":memory:")
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    space = {"remat": ("none",), "kernel": ("xla",), "block_q": (16,),
+             "block_k": (16,), "scan_unroll": (1,), "mlstm_chunk": (16,)}
+    t = ComParTuner(cfg, shape, mesh=None, db=db, project="wc",
+                    mode="new", executor="wallclock", timeout_s=120)
+    t.sweep(providers=["fsdp"], clause_space=space, max_flags=0,
+            workers=8, use_cache=False)
+    assert seen["workers"] == 1
+
+
+def test_deadline_failures_are_not_cached(tmp_path):
+    db = SweepDB(str(tmp_path / "sweep.db"))
+    t1, _, _ = _tuner(db, "dl")
+    t1.executor.timeout_s = 0.001   # soft-fail everything scored
+    with pytest.raises(ValueError):  # nothing valid left -> fuse() refuses
+        _sweep(t1, use_cache=True, workers=2)
+    rows = db.results("dl")
+    assert rows and all(r["status"] == "failed" for r in rows)
+    assert db.cache_size() == 0
+    # a retry with a sane budget recompiles (nothing poisoned)...
+    t2, _, _ = _tuner(db, "dl2")
+    _, rep2 = _sweep(t2, use_cache=True)
+    assert rep2.n_done == rep2.n_combinations
+    # ...and its good scores DO land in the cache
+    assert db.cache_size() == rep2.n_scored
+
+
+def test_wallclock_disables_prune():
+    """combo_lower_bound divides by an analytic hw peak; against measured
+    wall seconds the certificate doesn't hold, so prune must switch off."""
+    db = SweepDB(":memory:")
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    space = {"remat": ("none",), "kernel": ("xla",), "block_q": (16,),
+             "block_k": (16,), "scan_unroll": (1,), "mlstm_chunk": (16,)}
+    t = ComParTuner(cfg, shape, mesh=None, db=db, project="wp",
+                    mode="new", executor="wallclock", timeout_s=120)
+    _, rep = t.sweep(providers=["fsdp"], clause_space=space, max_flags=0,
+                     prune=True, use_cache=False)
+    assert rep.n_pruned == 0 and rep.n_done == rep.n_combinations
+
+
+def test_unexpected_worker_exception_fails_row_not_sweep(monkeypatch):
+    """A non-CombinationFailed bug in scoring must become a failed row;
+    an escaping exception would abort the sweep mid-batch."""
+    db = SweepDB(":memory:")
+    tuner, _, _ = _tuner(db, "boom")
+    orig = tuner.executor.score_segment
+    calls = {"n": 0}
+
+    def flaky(cfg, shape, seg, combo):
+        calls["n"] += 1
+        if calls["n"] == 3:   # a stack group — its siblings still succeed
+            raise ValueError("synthetic analysis bug")
+        return orig(cfg, shape, seg, combo)
+
+    monkeypatch.setattr(tuner.executor, "score_segment", flaky)
+    plan, rep = _sweep(tuner, use_cache=False)
+    assert rep.n_failed > 0
+    assert rep.n_done + rep.n_failed == rep.n_combinations
+    rows = [r for r in db.results("boom") if r["status"] == "failed"]
+    assert any("ValueError" in r["error"] for r in rows)
+
+
+# --- satellite fixes ---------------------------------------------------------
+
+def test_db_record_unregistered_raises():
+    db = SweepDB(":memory:")
+    db.open_project("p", "new")
+    with pytest.raises(KeyError):
+        db.record("p", "g0", "deadbeef0000", status="done",
+                  cost={"total_s": 1.0})
+
+
+def test_db_record_many_partial_unregistered_raises_and_rolls_back():
+    db = SweepDB(":memory:")
+    db.open_project("p", "new")
+    combo = Combination("fsdp", frozenset(), SegmentClause())
+    db.register("p", "g0", combo)
+    with pytest.raises(KeyError):
+        db.record_many("p", [
+            {"segment": "g0", "cid": combo.cid, "status": "done",
+             "cost": {"total_s": 1.0}},
+            {"segment": "g0", "cid": "missing000000", "status": "done"},
+        ])
+    assert db.status("p", "g0", combo.cid) == "pending"
+
+
+def test_deadline_off_main_thread_soft_fails():
+    out = {}
+
+    def burn(cpu_s):
+        t0 = time.thread_time()
+        while time.thread_time() - t0 < cpu_s:
+            sum(i * i for i in range(1000))
+
+    def body():
+        try:
+            with deadline(1):
+                burn(1.1)    # the soft deadline is CPU time, not wall
+            out["raised"] = False
+        except CombinationFailed as e:
+            out["raised"] = True
+            out["msg"] = str(e)
+
+    t = threading.Thread(target=body)
+    t.start()
+    t.join()
+    assert out["raised"] and "soft" in out["msg"]
+
+
+def test_deadline_off_main_thread_passes_within_budget():
+    out = {}
+
+    def body():
+        with deadline(30):
+            out["ok"] = True
+
+    t = threading.Thread(target=body)
+    t.start()
+    t.join()
+    assert out.get("ok")

@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:        # container lacks hypothesis: deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.checkpoint.store import CheckpointStore
 from repro.configs import get_arch, get_shape
@@ -181,6 +184,8 @@ def test_hlo_flops_counts_scan_trips():
     assert abs(res["flops"] - expect) / expect < 0.01
     # XLA's own cost_analysis misses the trips — that's why we parse
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):      # jax < 0.5: one dict per device
+        ca = ca[0]
     assert ca["flops"] < res["flops"]
 
 
