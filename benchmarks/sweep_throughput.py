@@ -8,12 +8,17 @@ Measures combos/sec of three engine settings on one smoke registry config:
   engine-warm  same engine, second sweep against the populated cache
                (must recompile NOTHING)
 
-Asserts the fused plans of all three runs are identical (the engine is an
+With ``--backend process`` (or ``both``) an ``engine-cold-process`` row is
+added: the same cold engine on the spawned-worker process backend (true
+parallel tracing past the GIL + hard preemptive timeouts) — thread rows
+are always reported alongside, so backend numbers stay comparable.
+
+Asserts the fused plans of all runs are identical (the engine is an
 optimization, not an approximation) and reports speedups vs seed-style.
 
   PYTHONPATH=src python benchmarks/sweep_throughput.py [--quick]
       [--arch granite-8b] [--shape train_4k] [--workers N]
-      [--assert-speedup X]
+      [--backend thread|process|both] [--assert-speedup X]
 """
 from __future__ import annotations
 
@@ -36,7 +41,7 @@ def _sweep(db, project, cfg, shape, space, **kw):
 
 def run(quick: bool = False, arch: str = "granite-8b",
         shape_name: str = "train_4k", workers: int = 0,
-        assert_speedup: float = 0.0):
+        backend: str = "thread", assert_speedup: float = 0.0):
     from repro.configs import get_arch, get_shape
     from repro.core.db import SweepDB
 
@@ -74,8 +79,12 @@ def run(quick: bool = False, arch: str = "granite-8b",
         assert plan1.segments == plan0.segments, "engine changed the plan!"
         assert plan2.segments == plan0.segments, "warm sweep changed the plan!"
         assert rep2.n_scored == 0, "warm sweep recompiled something"
-        assert rep2.n_cached == rep2.n_combinations, \
-            f"cache hits {rep2.n_cached} != combos {rep2.n_combinations}"
+        # pruned outcomes are deliberately never cached (they are relative
+        # to a project's incumbent); a warm sweep re-prunes them from
+        # cache-seeded incumbents without compiling
+        assert rep2.n_cached + rep2.n_pruned == rep2.n_combinations, \
+            (f"cache hits {rep2.n_cached} + pruned {rep2.n_pruned} "
+             f"!= combos {rep2.n_combinations}")
 
         n = rep0.n_combinations
         rows = [
@@ -83,8 +92,16 @@ def run(quick: bool = False, arch: str = "granite-8b",
             ("engine-cold", t_cold, rep1),
             ("engine-warm", t_warm, rep2),
         ]
+        if backend in ("process", "both"):
+            plan3, rep3, t_proc = _sweep(
+                SweepDB(os.path.join(tmp, "proc.db")), "proc", cfg, shape,
+                space, backend="process", workers=workers,
+                use_cache=True, prune=True)
+            assert plan3.segments == plan0.segments, \
+                "process backend changed the plan!"
+            rows.append(("engine-cold-process", t_proc, rep3))
         print(f"# arch={cfg.name} shape={shape.name} combos={n} "
-              f"workers={workers} quick={quick}")
+              f"workers={workers} backend={backend} quick={quick}")
         print("name,combos_per_s,seconds,scored,cached,pruned,speedup_vs_seed")
         for name, t, rep in rows:
             print(f"{name},{n / t:.1f},{t:.2f},{rep.n_scored},"
@@ -103,10 +120,13 @@ def main():
     ap.add_argument("--arch", default="granite-8b")
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--workers", type=int, default=0)
+    ap.add_argument("--backend", default="thread",
+                    choices=("thread", "process", "both"))
     ap.add_argument("--assert-speedup", type=float, default=0.0)
     args = ap.parse_args()
     run(quick=args.quick, arch=args.arch, shape_name=args.shape,
-        workers=args.workers, assert_speedup=args.assert_speedup)
+        workers=args.workers, backend=args.backend,
+        assert_speedup=args.assert_speedup)
 
 
 if __name__ == "__main__":

@@ -2,4 +2,7 @@ from repro.configs.base import (  # noqa: F401
     ArchConfig, ShapeConfig, ScanGroup, SHAPES,
     TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K, shape_applies,
 )
-from repro.configs.registry import ARCHS, get_arch, get_shape, all_cells  # noqa: F401
+from repro.configs.registry import (  # noqa: F401
+    ARCHS, all_cells, arch_from_spec, arch_to_spec, get_arch, get_shape,
+    shape_from_spec, shape_to_spec,
+)

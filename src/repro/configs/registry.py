@@ -1,5 +1,16 @@
-"""Architecture registry: ``--arch <id>`` lookup."""
+"""Architecture registry: ``--arch <id>`` lookup + config wire format.
+
+``arch_to_spec`` / ``shape_to_spec`` serialize a config for the sweep
+backends' JobSpec wire format (process workers today, a remote/HTTP
+backend next).  Deserialization prefers the registry — a spec whose name
+resolves to a field-identical registry config (including the ``-smoke``
+derivations) returns the canonical object — and falls back to rebuilding
+the dataclass from its serialized fields for ad-hoc configs.
+"""
 from __future__ import annotations
+
+import dataclasses
+import json
 
 from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, shape_applies
 
@@ -34,6 +45,41 @@ def get_shape(name: str) -> ShapeConfig:
     if name not in SHAPES:
         raise KeyError(f"unknown shape {name!r}; have {sorted(SHAPES)}")
     return SHAPES[name]
+
+
+def _jsonable(d: dict) -> dict:
+    """Normalize through JSON (tuples -> lists) for field comparison."""
+    return json.loads(json.dumps(d, sort_keys=True, default=str))
+
+
+def arch_to_spec(cfg: ArchConfig) -> dict:
+    return {"name": cfg.name, "fields": _jsonable(dataclasses.asdict(cfg))}
+
+
+def arch_from_spec(spec: dict) -> ArchConfig:
+    try:
+        cand = get_arch(spec["name"])
+        if _jsonable(dataclasses.asdict(cand)) == _jsonable(spec["fields"]):
+            return cand
+    except KeyError:
+        pass
+    fields = dict(spec["fields"])
+    fields["block_pattern"] = tuple(fields.get("block_pattern") or ("attn",))
+    return ArchConfig(**fields)
+
+
+def shape_to_spec(shape: ShapeConfig) -> dict:
+    return {"name": shape.name, "fields": _jsonable(dataclasses.asdict(shape))}
+
+
+def shape_from_spec(spec: dict) -> ShapeConfig:
+    try:
+        cand = get_shape(spec["name"])
+        if _jsonable(dataclasses.asdict(cand)) == _jsonable(spec["fields"]):
+            return cand
+    except KeyError:
+        pass
+    return ShapeConfig(**spec["fields"])
 
 
 def all_cells():

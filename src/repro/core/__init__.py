@@ -1,5 +1,9 @@
 """ComParX core: the paper's contribution (segmentation + multi-provider
 hyper-parameter sweep + DB + fusion + black-box validation)."""
+from repro.core.backends import (  # noqa: F401
+    JobOutcome, JobSpec, ProcessBackend, Recorder, Scheduler, ThreadBackend,
+    make_backend,
+)
 from repro.core.combinator import (  # noqa: F401
     Combination, GlobalKnobs, enumerate_combinations,
     paper_combination_count,

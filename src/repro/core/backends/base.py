@@ -1,0 +1,219 @@
+"""Scoring-backend wire format + shared machinery.
+
+The sweep pipeline is three composable stages:
+
+    Scheduler  ->  ScoringBackend  ->  Recorder
+
+The Scheduler turns registered (segment, combination) rows into unique
+:class:`JobSpec` programs (structural grouping, validation, persistent
+cache resolution, lower-bound ordering).  A ScoringBackend scores them —
+in threads, in spawned worker processes, or (next) on a remote service —
+and yields one :class:`JobOutcome` per job.  The Recorder fans outcomes
+back out to member rows and sinks them into the DB in batched
+transactions.
+
+``JobSpec`` / ``JobOutcome`` are a *serializable* wire format: pure-JSON
+``to_json``/``from_json`` on both, arch/shape reconstructed from the
+config registry by name (``repro.configs.registry.arch_from_spec``).
+A process worker and a future HTTP worker speak exactly this format.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, Optional, Sequence, Tuple
+
+from repro.core.combinator import Combination
+from repro.core.segment import Segment
+
+#: structured outcome taxonomy (replaces string-matched statuses)
+DONE = "done"          # compiled + analyzed; cost attached
+FAILED = "failed"      # could not be scored; ``transient`` says whether
+                       # the failure is deterministic (cacheable) or a
+                       # deadline/crash (retryable, never cached)
+PRUNED = "pruned"      # skipped by the exact lower-bound prune
+STATUSES = (DONE, FAILED, PRUNED)
+
+
+@dataclass
+class JobSpec:
+    """One *unique* program to score (the process/remote wire format).
+
+    ``segments`` lists every segment name whose (segment, combination)
+    rows share this program; ``signature``/``eff_cid`` are the group's
+    persistent-cache key components, shipped so a worker can consult the
+    shared score cache itself.  Field layout is compatible with
+    :class:`repro.core.executor.SweepJob` so the thread backend can feed
+    specs straight into ``ParallelSweepRunner``.
+    """
+    key: str
+    seg: Segment
+    combo: Combination
+    segments: Tuple[str, ...] = ()
+    bound_s: float = 0.0
+    signature: str = ""
+    eff_cid: str = ""
+
+    def to_json(self) -> Dict:
+        return {"key": self.key, "seg": self.seg.to_json(),
+                "combo": self.combo.to_json(),
+                "segments": list(self.segments), "bound_s": self.bound_s,
+                "signature": self.signature, "eff_cid": self.eff_cid}
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "JobSpec":
+        return cls(d["key"], Segment.from_json(d["seg"]),
+                   Combination.from_json(d["combo"]),
+                   tuple(d.get("segments") or ()),
+                   float(d.get("bound_s", 0.0)),
+                   d.get("signature", ""), d.get("eff_cid", ""))
+
+
+@dataclass
+class JobOutcome:
+    """The result of scoring one JobSpec.
+
+    ``transient`` marks deadline overruns and worker crashes: outcomes
+    that depend on machine load, the time budget, or worker health — a
+    retry with a bigger budget must be possible, so transient failures
+    are never cached.  ``cached`` marks outcomes a worker served from the
+    persistent score cache (no compile happened).  ``attempts`` counts
+    dispatches, >1 after a requeue.
+    """
+    key: str
+    status: str                      # DONE | FAILED | PRUNED
+    cost: Optional[Dict] = None      # CostTerms.as_dict()
+    error: str = ""
+    transient: bool = False
+    cached: bool = False
+    attempts: int = 1
+
+    def to_json(self) -> Dict:
+        return {"key": self.key, "status": self.status, "cost": self.cost,
+                "error": self.error, "transient": self.transient,
+                "cached": self.cached, "attempts": self.attempts}
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "JobOutcome":
+        return cls(d["key"], d["status"], d.get("cost"),
+                   d.get("error", ""), bool(d.get("transient", False)),
+                   bool(d.get("cached", False)), int(d.get("attempts", 1)))
+
+
+@dataclass
+class JobGroup:
+    """All pending (segment, cid) rows that share one program."""
+    seg: Segment
+    combo: Combination
+    signature: str
+    eff_cid: str
+    members: list = field(default_factory=list)   # [(segment, cid), ...]
+
+    @property
+    def segment_names(self) -> Tuple[str, ...]:
+        return tuple(sorted({s for s, _ in self.members}))
+
+
+class IncumbentTracker:
+    """Thread-safe per-segment incumbent bests + the exact prune check.
+
+    A job is pruned only when its analytic lower bound exceeds the
+    incumbent best of *every* member segment by ``prune_margin`` — since
+    bound <= true score, a pruned job can never be the argmin.
+    """
+
+    def __init__(self, prune: bool = False, prune_margin: float = 0.1):
+        self.prune = prune
+        self.prune_margin = prune_margin
+        self._lock = threading.Lock()
+        self._best: Dict[str, float] = {}
+
+    def seed(self, incumbents: Optional[Dict[str, float]]):
+        if not incumbents:
+            return
+        with self._lock:
+            for s, v in incumbents.items():
+                cur = self._best.get(s)
+                if cur is None or v < cur:
+                    self._best[s] = v
+
+    def observe(self, segments: Sequence[str], total_s: float):
+        with self._lock:
+            for s in segments:
+                cur = self._best.get(s)
+                if cur is None or total_s < cur:
+                    self._best[s] = total_s
+
+    def pruned(self, job: JobSpec) -> bool:
+        if not self.prune or job.bound_s <= 0.0 or not job.segments:
+            return False
+        with self._lock:
+            return all(
+                s in self._best and
+                job.bound_s > self._best[s] * (1.0 + self.prune_margin)
+                for s in job.segments)
+
+
+class ScoringBackend:
+    """Interface: score JobSpecs, yield JobOutcomes as they complete."""
+
+    name = "?"
+
+    def run(self, jobs: Sequence[JobSpec],
+            incumbents: Optional[Dict[str, float]] = None
+            ) -> Iterator[JobOutcome]:
+        raise NotImplementedError
+
+    def close(self):
+        """Release workers/resources; idempotent."""
+
+
+def executor_to_spec(executor) -> Dict:
+    """Serialize an executor for worker-side reconstruction."""
+    import dataclasses
+
+    from repro.core.executor import (CrashExecutor, DryRunExecutor,
+                                     SleepExecutor, WallClockExecutor)
+    if isinstance(executor, DryRunExecutor):
+        # hw is cache identity (cache_tag embeds hw.name): the worker
+        # must score with the parent's hardware model, not the default
+        return {"kind": "dryrun", "timeout_s": executor.timeout_s,
+                "hw": dataclasses.asdict(executor.hw)}
+    if isinstance(executor, WallClockExecutor):
+        return {"kind": "wallclock", "timeout_s": executor.timeout_s,
+                "repeats": executor.repeats}
+    if isinstance(executor, SleepExecutor):
+        return {"kind": "sleep", "sleep_s": executor.sleep_s,
+                "timeout_s": executor.timeout_s}
+    if isinstance(executor, CrashExecutor):
+        return {"kind": "crash", "timeout_s": executor.timeout_s}
+    raise TypeError(f"no wire spec for executor {type(executor).__name__} "
+                    f"(process backend supports dryrun/wallclock)")
+
+
+def executor_from_spec(spec: Dict, *, allow_test: bool = False):
+    """Rebuild an executor in a worker process (mesh-less: meshes are not
+    serializable, so the process backend is gated to local sweeps).
+
+    ``allow_test`` admits the fault-injection executors (sleep/crash).
+    Local process workers pass True — they trust their parent (same
+    machine, same user).  A remote/HTTP backend deserializing *client*
+    specs must keep the default: ``{"kind": "crash"}`` from an untrusted
+    client would otherwise be a remote kill switch for every worker.
+    """
+    from repro.core.cost_model import Hardware, V5E
+    from repro.core.executor import (CrashExecutor, DryRunExecutor,
+                                     SleepExecutor, WallClockExecutor)
+    kind = spec["kind"]
+    if kind == "dryrun":
+        hw = Hardware(**spec["hw"]) if spec.get("hw") else V5E
+        return DryRunExecutor(None, hw=hw, timeout_s=spec.get("timeout_s"))
+    if kind == "wallclock":
+        return WallClockExecutor(None, repeats=spec.get("repeats", 5),
+                                 timeout_s=spec.get("timeout_s"))
+    if allow_test and kind == "sleep":
+        return SleepExecutor(sleep_s=spec.get("sleep_s", 3600.0),
+                             timeout_s=spec.get("timeout_s"))
+    if allow_test and kind == "crash":
+        return CrashExecutor(timeout_s=spec.get("timeout_s"))
+    raise ValueError(f"unknown executor kind {kind!r}")

@@ -1,0 +1,155 @@
+"""Scheduler: registered rows -> ordered unique JobSpecs.
+
+The stage of the sweep pipeline that runs before any scoring: structural
+grouping (rows that build the same program share one job), black-box
+validation, persistent score-cache resolution (whole groups settled
+without compiling), and lower-bound ordering (cheapest analytic bound
+first, so incumbents tighten early and pruning bites sooner).
+Extracted from the monolithic ``ComParTuner._execute``.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.backends.base import JobGroup, JobSpec
+from repro.core.backends.recorder import Recorder
+from repro.core.combinator import Combination, effective_cid, mapping_key
+from repro.core.cost_model import CostTerms, V5E, combo_lower_bound
+from repro.core.db import SweepDB
+from repro.core.segment import Segment
+from repro.core.validator import validate_combination
+
+#: statuses that Continue mode treats as settled (no re-run on resume)
+SETTLED = ("done", "failed", "invalid", "pruned")
+
+
+def shape_key(shape: ShapeConfig) -> str:
+    return f"{shape.kind}:{shape.seq_len}x{shape.global_batch}"
+
+
+def mesh_key(mesh) -> str:
+    if mesh is None:
+        return "local"
+    dev = mesh.devices.flat[0]
+    blob = json.dumps({"axes": list(mesh.axis_names),
+                       "shape": [int(d) for d in mesh.devices.shape],
+                       "platform": str(getattr(dev, "platform", "?"))})
+    return hashlib.sha1(blob.encode()).hexdigest()[:12]
+
+
+def env_key(mesh, executor) -> str:
+    """The score-cache environment key: mesh content + the executor's
+    ``cache_tag``.  Scores from a different executor or hardware model
+    are never interchangeable."""
+    return f"{mesh_key(mesh)}/{getattr(executor, 'cache_tag', 'unknown')}"
+
+
+# aliases usable where Scheduler's parameter names shadow the functions
+_shape_key_fn = shape_key
+_env_key_fn = env_key
+
+
+@dataclass
+class SweepWork:
+    """What the Scheduler hands the backend: ordered unique jobs, the
+    groups to fan outcomes back out to, and seeded incumbents."""
+    jobs: List[JobSpec] = field(default_factory=list)
+    groups: Dict[str, JobGroup] = field(default_factory=dict)
+    incumbents: Dict[str, float] = field(default_factory=dict)
+    shape_key: str = ""
+    mesh_key: str = ""
+
+
+class Scheduler:
+    def __init__(self, db: SweepDB, project: str, cfg: ArchConfig,
+                 shape: ShapeConfig, mesh, executor, *,
+                 validate: bool = False, share_scores: bool = True,
+                 use_cache: bool = True,
+                 shape_key: Optional[str] = None,
+                 mesh_key: Optional[str] = None):
+        self.db = db
+        self.project = project
+        self.cfg = cfg
+        self.shape = shape
+        self.mesh = mesh
+        self.executor = executor
+        self.validate = validate
+        self.share_scores = share_scores
+        self.use_cache = use_cache
+        # the cache keys the pipeline reads AND writes under — a caller
+        # (the tuner) passes one pair so write and read can't desync
+        self.shape_key = shape_key if shape_key is not None \
+            else _shape_key_fn(shape)
+        self.mesh_key = mesh_key if mesh_key is not None \
+            else _env_key_fn(mesh, executor)
+
+    # ------------------------------------------------------------------
+    def build(self, segs: Sequence[Segment],
+              per_seg_combos: Dict[str, List[Combination]],
+              recorder: Recorder) -> SweepWork:
+        """Group, validate, cache-resolve, bound and order the pending
+        rows.  Invalid rows and cache hits are settled through the
+        recorder; everything else becomes a JobSpec."""
+        work = SweepWork(shape_key=self.shape_key, mesh_key=self.mesh_key)
+        statuses = self.db.statuses(self.project)
+
+        # incumbent best per segment, seeded from prior rows (resume)
+        for r in self.db.results(self.project):
+            if r["status"] == "done" and r["cost"]:
+                t = CostTerms.from_dict(r["cost"]).total_s
+                cur = work.incumbents.get(r["segment"])
+                if cur is None or t < cur:
+                    work.incumbents[r["segment"]] = t
+
+        # group pending rows by structural program identity
+        valid_memo: Dict[str, Tuple[bool, str]] = {}
+        for seg in segs:
+            sig = seg.signature(self.cfg, self.shape)
+            relevant = seg.relevant_clause_fields(self.shape.kind)
+            for c in per_seg_combos[seg.name]:
+                if statuses.get((seg.name, c.cid)) in SETTLED:
+                    continue
+                if self.validate:
+                    if c.cid not in valid_memo:
+                        valid_memo[c.cid] = validate_combination(self.cfg, c)
+                    ok, msg = valid_memo[c.cid]
+                    if not ok:
+                        recorder.invalid(seg.name, c.cid, msg)
+                        continue
+                ec = effective_cid(
+                    c, relevant, mapping_key(self.cfg, self.mesh, c, seg))
+                key = f"{sig}/{ec}" if self.share_scores \
+                    else f"{seg.name}/{c.cid}"
+                g = work.groups.setdefault(key, JobGroup(seg, c, sig, ec))
+                g.members.append((seg.name, c.cid))
+
+        # persistent cache stage: resolve whole groups without compiling
+        n_chips = getattr(self.executor, "n_chips", 1)
+        hw = getattr(self.executor, "hw", V5E)
+        for key, g in list(work.groups.items()):
+            hit = self.db.cache_get(g.signature, work.shape_key,
+                                    work.mesh_key, g.eff_cid) \
+                if self.use_cache else None
+            if hit is not None:
+                recorder.cache_hit(g, hit)
+                if hit["status"] == "done" and hit["cost"]:
+                    t = CostTerms.from_dict(hit["cost"]).total_s
+                    for sname in g.segment_names:
+                        if t < work.incumbents.get(sname, float("inf")):
+                            work.incumbents[sname] = t
+                del work.groups[key]
+                continue
+            work.jobs.append(JobSpec(
+                key, g.seg, g.combo, segments=g.segment_names,
+                bound_s=combo_lower_bound(self.cfg, self.shape, g.seg,
+                                          g.combo, n_chips, hw),
+                signature=g.signature, eff_cid=g.eff_cid))
+        recorder.flush()
+
+        # cheapest-bound-first: incumbents tighten early, pruning bites
+        work.jobs.sort(key=lambda j: (j.bound_s, j.key))
+        return work

@@ -1,0 +1,38 @@
+"""Thread backend: in-process scoring on a thread pool.
+
+Preserves the PR-1 ``ParallelSweepRunner`` semantics exactly — shared
+incumbents, exact pruning, soft (post-hoc, CPU-time) deadlines off the
+main thread — by wrapping it.  ``workers=1`` degrades to a plain
+in-thread loop, which is also the ``backend="sequential"`` mode.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional, Sequence
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.backends.base import JobOutcome, JobSpec, ScoringBackend
+
+
+class ThreadBackend(ScoringBackend):
+    name = "thread"
+
+    def __init__(self, executor, cfg: ArchConfig, shape: ShapeConfig, *,
+                 workers: int = 1, prune: bool = False,
+                 prune_margin: float = 0.1):
+        # imported here (not at module top) so monkeypatched
+        # ParallelSweepRunner spies in tests keep observing construction
+        from repro.core.executor import ParallelSweepRunner
+        self.runner = ParallelSweepRunner(
+            executor, cfg, shape, workers=workers,
+            prune=prune, prune_margin=prune_margin)
+
+    def run(self, jobs: Sequence[JobSpec],
+            incumbents: Optional[Dict[str, float]] = None
+            ) -> Iterator[JobOutcome]:
+        # JobSpec is field-compatible with SweepJob; the runner re-derives
+        # bounds and ordering itself (idempotent with the Scheduler's)
+        for res in self.runner.run(list(jobs), incumbents=incumbents):
+            yield JobOutcome(
+                key=res.job.key, status=res.status,
+                cost=res.cost.as_dict() if res.cost is not None else None,
+                error=res.error, transient=res.transient)

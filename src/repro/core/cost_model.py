@@ -53,12 +53,18 @@ class CostTerms:
         return max(terms, key=terms.get)
 
     def as_dict(self) -> Dict[str, float]:
-        return {"compute_s": self.compute_s, "memory_s": self.memory_s,
-                "collective_s": self.collective_s, "flops": self.flops,
-                "bytes_accessed": self.bytes_accessed,
-                "collective_bytes": self.collective_bytes,
-                "bytes_per_device": self.bytes_per_device,
-                "total_s": self.total_s}
+        out = {"compute_s": self.compute_s, "memory_s": self.memory_s,
+               "collective_s": self.collective_s, "flops": self.flops,
+               "bytes_accessed": self.bytes_accessed,
+               "collective_bytes": self.collective_bytes,
+               "bytes_per_device": self.bytes_per_device,
+               "total_s": self.total_s}
+        if self.detail:
+            # keep the per-op detail on the wire: process workers ship
+            # scores as dicts, and dropping detail there would make thread
+            # and process sweeps record different rows
+            out["detail"] = dict(self.detail)
+        return out
 
     @classmethod
     def from_dict(cls, d: Dict[str, float]) -> "CostTerms":
@@ -68,7 +74,8 @@ class CostTerms:
                    flops=d.get("flops", 0.0),
                    bytes_accessed=d.get("bytes_accessed", 0.0),
                    collective_bytes=d.get("collective_bytes", 0.0),
-                   bytes_per_device=d.get("bytes_per_device", 0.0))
+                   bytes_per_device=d.get("bytes_per_device", 0.0),
+                   detail=dict(d.get("detail") or {}))
 
 
 def terms_from_analysis(flops: float, bytes_accessed: float,

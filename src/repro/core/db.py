@@ -48,7 +48,10 @@ CREATE TABLE IF NOT EXISTS score_cache (
 class SweepDB:
     def __init__(self, path: str = ":memory:"):
         # The sweep engine is the only writer; threads only read compiled
-        # artifacts, so a single shared connection is safe.
+        # artifacts, so a single shared connection is safe.  ``path`` is
+        # kept so the process backend can hand workers a read-only view
+        # of the score cache (WAL allows concurrent readers).
+        self.path = path
         self.conn = sqlite3.connect(path, check_same_thread=False)
         # WAL keeps readers off the writer's back on file-backed DBs and
         # makes batched commits cheap; both pragmas are no-ops on :memory:.
@@ -217,3 +220,48 @@ class SweepDB:
                 "GROUP BY status", (project,)):
             out[st] = n
         return out
+
+
+class ScoreCacheReader:
+    """Read-only ``score_cache`` access for out-of-process sweep workers.
+
+    Opens its own connection in query-only mode: a worker can read cache
+    entries the parent's Recorder flushed mid-run (WAL supports concurrent
+    readers under one writer) but can never write or take the write lock.
+    Every failure path degrades to a cache miss — a broken reader must
+    never fail a job.
+    """
+
+    def __init__(self, path: str):
+        self.conn = None
+        if not path or path == ":memory:":
+            return              # private in-memory DBs are not shareable
+        try:
+            conn = sqlite3.connect(path, check_same_thread=False, timeout=1.0)
+            conn.execute("PRAGMA query_only=ON")
+            self.conn = conn
+        except sqlite3.Error:
+            self.conn = None
+
+    def get(self, signature: str, shape: str, mesh: str,
+            cid: str) -> Optional[Dict]:
+        if self.conn is None:
+            return None
+        try:
+            cur = self.conn.execute(
+                "SELECT status, cost, error FROM score_cache WHERE "
+                "signature=? AND shape=? AND mesh=? AND cid=?",
+                (signature, shape, mesh, cid))
+            row = cur.fetchone()
+        except sqlite3.Error:
+            return None
+        if row is None:
+            return None
+        return {"status": row[0],
+                "cost": json.loads(row[1]) if row[1] else None,
+                "error": row[2]}
+
+    def close(self):
+        if self.conn is not None:
+            self.conn.close()
+            self.conn = None

@@ -16,8 +16,8 @@ import threading
 import time
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from contextlib import contextmanager
-from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional, Sequence
 
 import jax
 import numpy as np
@@ -31,7 +31,19 @@ from repro.runtime.hlo import analyze_hlo
 
 
 class CombinationFailed(Exception):
-    pass
+    """A combination could not be scored.
+
+    ``transient`` distinguishes outcomes that depend on machine load or
+    the time budget (deadline overruns, worker crashes) from deterministic
+    failures (lowering / sharding errors).  Transient failures are
+    retryable and must never enter the persistent score cache; the flag
+    travels on the raising executor, so cacheability is decided where the
+    failure happened instead of by substring-matching error text.
+    """
+
+    def __init__(self, msg: str = "", *, transient: bool = False):
+        super().__init__(msg)
+        self.transient = transient
 
 
 @contextmanager
@@ -59,18 +71,20 @@ def deadline(seconds: Optional[int]):
         t0 = time.thread_time()
         yield
         if time.thread_time() - t0 > seconds:
-            raise CombinationFailed(f"deadline {seconds}s exceeded (soft)")
+            raise CombinationFailed(f"deadline {seconds}s exceeded (soft)",
+                                    transient=True)
         return
 
     def handler(signum, frame):
-        raise CombinationFailed(f"deadline {seconds}s exceeded")
+        raise CombinationFailed(f"deadline {seconds}s exceeded",
+                                transient=True)
 
     old = signal.signal(signal.SIGALRM, handler)
-    signal.alarm(seconds)
+    signal.setitimer(signal.ITIMER_REAL, float(seconds))
     try:
         yield
     finally:
-        signal.alarm(0)
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
         signal.signal(signal.SIGALRM, old)
 
 
@@ -222,18 +236,58 @@ class WallClockExecutor:
         return t
 
 
+class SleepExecutor:
+    """Deterministic straggler: sleeps ``sleep_s`` per job *without* arming
+    the deadline — the stand-in for a hung native compile that SIGALRM
+    cannot interrupt.  Exists to exercise the process backend's hard
+    (kill-based) timeout in tests and CI; never used in real sweeps."""
+
+    parallel_safe = True
+
+    def __init__(self, sleep_s: float = 3600.0,
+                 timeout_s: Optional[float] = None):
+        self.sleep_s = sleep_s
+        self.timeout_s = timeout_s
+        self.n_chips = 1
+
+    @property
+    def cache_tag(self) -> str:
+        return f"sleep:{self.sleep_s}"
+
+    def score_segment(self, cfg: ArchConfig, shape: ShapeConfig,
+                      seg: Segment, combo: Combination) -> CostTerms:
+        time.sleep(self.sleep_s)
+        return CostTerms(compute_s=self.sleep_s)
+
+
+class CrashExecutor:
+    """Kills its own process on every job — the stand-in for a segfaulting
+    worker, used to exercise the process backend's crash detection and
+    requeue-once-then-fail policy.  Never used in real sweeps."""
+
+    parallel_safe = True
+
+    def __init__(self, timeout_s: Optional[float] = None):
+        self.timeout_s = timeout_s
+        self.n_chips = 1
+
+    @property
+    def cache_tag(self) -> str:
+        return "crash"
+
+    def score_segment(self, cfg: ArchConfig, shape: ShapeConfig,
+                      seg: Segment, combo: Combination) -> CostTerms:
+        import os
+        os._exit(13)
+
+
 # --- parallel, pruning sweep runner -----------------------------------------
 
-@dataclass
-class SweepJob:
-    """One *unique* program to score.  ``segments`` lists every segment
-    name whose (segment, combination) rows share this program — the tuner
-    fans the result back out to all of them."""
-    key: str
-    seg: Segment
-    combo: Combination
-    segments: Tuple[str, ...] = ()
-    bound_s: float = 0.0
+# One *unique* program to score; ``segments`` lists every segment name
+# whose (segment, combination) rows share it.  The canonical dataclass
+# lives in backends.base (it is also the process/remote wire format) —
+# one type, so Scheduler-built jobs and hand-built jobs can never drift.
+from repro.core.backends.base import JobSpec as SweepJob  # noqa: E402
 
 
 @dataclass
@@ -242,6 +296,7 @@ class JobResult:
     status: str                       # done | failed | pruned
     cost: Optional[CostTerms] = None
     error: str = ""
+    transient: bool = False           # deadline/crash — retryable, uncacheable
 
 
 class ParallelSweepRunner:
@@ -263,31 +318,24 @@ class ParallelSweepRunner:
     def __init__(self, executor, cfg: ArchConfig, shape: ShapeConfig, *,
                  workers: int = 1, prune: bool = False,
                  prune_margin: float = 0.1):
+        # the exactness-critical prune predicate lives in ONE place
+        # (backends.base.IncumbentTracker), shared with the process
+        # backend so all backends prune — and therefore fuse — identically
+        from repro.core.backends.base import IncumbentTracker
         self.executor = executor
         self.cfg = cfg
         self.shape = shape
         self.workers = max(1, int(workers))
         self.prune = prune
         self.prune_margin = prune_margin
-        self._lock = threading.Lock()
-        self._incumbents: Dict[str, float] = {}
+        self.tracker = IncumbentTracker(prune, prune_margin)
 
     # ------------------------------------------------------------------
     def _pruned(self, job: SweepJob) -> bool:
-        if not self.prune or job.bound_s <= 0.0 or not job.segments:
-            return False
-        with self._lock:
-            return all(
-                s in self._incumbents and
-                job.bound_s > self._incumbents[s] * (1.0 + self.prune_margin)
-                for s in job.segments)
+        return self.tracker.pruned(job)
 
     def _observe(self, segments: Sequence[str], total_s: float):
-        with self._lock:
-            for s in segments:
-                cur = self._incumbents.get(s)
-                if cur is None or total_s < cur:
-                    self._incumbents[s] = total_s
+        self.tracker.observe(segments, total_s)
 
     def _run_job(self, job: SweepJob) -> JobResult:
         if self._pruned(job):
@@ -298,7 +346,8 @@ class ParallelSweepRunner:
             cost = self.executor.score_segment(
                 self.cfg, self.shape, job.seg, job.combo)
         except CombinationFailed as e:
-            return JobResult(job, "failed", error=str(e))
+            return JobResult(job, "failed", error=str(e),
+                             transient=getattr(e, "transient", False))
         except Exception as e:
             # an analysis bug must fail the row, not abort the sweep (an
             # escaping exception would drop the tuner's buffered batches)
@@ -314,17 +363,13 @@ class ParallelSweepRunner:
 
         ``incumbents``: segment name -> best known total_s, used to seed
         pruning (cache hits, Continue-mode rows)."""
-        if incumbents:
-            with self._lock:
-                for s, v in incumbents.items():
-                    cur = self._incumbents.get(s)
-                    if cur is None or v < cur:
-                        self._incumbents[s] = v
+        self.tracker.seed(incumbents)
         n_chips = getattr(self.executor, "n_chips", 1)
         hw = getattr(self.executor, "hw", V5E)
         for job in jobs:
-            job.bound_s = combo_lower_bound(
-                self.cfg, self.shape, job.seg, job.combo, n_chips, hw)
+            if job.bound_s <= 0.0:      # Scheduler-built jobs arrive bounded
+                job.bound_s = combo_lower_bound(
+                    self.cfg, self.shape, job.seg, job.combo, n_chips, hw)
         ordered = sorted(jobs, key=lambda j: (j.bound_s, j.key))
 
         if self.workers == 1:

@@ -7,6 +7,7 @@ the jitted program (sharding rules + remat + kernels + microbatching).
 from __future__ import annotations
 
 import json
+import logging
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 
@@ -16,6 +17,8 @@ from repro.core.providers import get_provider
 from repro.core.segment import Segment, fragment
 from repro.models.context import ModelContext, SegmentClause
 from repro.runtime.sharding import Rules
+
+log = logging.getLogger("repro.plan")
 
 
 @dataclass
@@ -71,20 +74,33 @@ def dp_shards(mesh) -> int:
 
 def build_contexts(cfg: ArchConfig, mesh, plan: Plan,
                    *, interpret: bool = True) -> Dict[str, ModelContext]:
-    """Apply a plan: per-segment ModelContext with provider rules."""
+    """Apply a plan: per-segment ModelContext with provider rules.
+
+    A plan missing a segment (e.g. fused for a smaller config) gets that
+    segment's context from the plan's first combination — loudly: the
+    substitution is logged and recorded in ``plan.meta`` so partial plans
+    stay visible instead of silently borrowing an arbitrary combination.
+    """
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) \
         if mesh is not None else {}
     ctxs: Dict[str, ModelContext] = {}
     groups = dp_shards(mesh)
+    substituted: Dict[str, Dict[str, str]] = {}
     for seg in fragment(cfg):
         combo = plan.segments.get(seg.name)
         if combo is None:
-            combo = next(iter(plan.segments.values()))
+            donor, combo = next(iter(plan.segments.items()))
+            log.warning(
+                "plan has no combination for segment %r; substituting %s "
+                "from segment %r", seg.name, combo.label(), donor)
+            substituted[seg.name] = {"from": donor, "combo": combo.label()}
         provider = get_provider(combo.provider)
         mapping = provider.mapping(cfg, axis_sizes, combo.flags, seg)
         ctxs[seg.name] = ModelContext(
             rules=Rules(mapping, mesh), clause=combo.clause,
             moe_groups=groups, interpret=interpret)
+    if substituted:
+        plan.meta.setdefault("substituted_segments", {}).update(substituted)
     return ctxs
 
 

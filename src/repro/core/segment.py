@@ -40,6 +40,16 @@ class Segment:
     def num_layers(self) -> int:
         return len(self.pattern) * self.repeats
 
+    # --- wire format (process/remote backend JobSpec) -----------------
+    def to_json(self) -> dict:
+        return {"name": self.name, "kind": self.kind,
+                "pattern": list(self.pattern), "repeats": self.repeats}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Segment":
+        return cls(d["name"], d["kind"], tuple(d.get("pattern") or ()),
+                   int(d.get("repeats", 1)))
+
     # --- structural identity ------------------------------------------
     def signature(self, cfg: ArchConfig, shape: ShapeConfig) -> str:
         """Content signature of everything that reaches ``segment_program``

@@ -4,62 +4,46 @@ Fragmentor -> Combinator (-> DB register) -> Parallelizer+Executor per
 combination (-> DB record, Continue-mode resumable) -> black-box validation
 -> Optimal Plan Generator -> fused Plan.
 
-The sweep execution core is a parallel, cache-aware, pruning engine:
+The sweep execution core is the three-stage pipeline of
+``repro.core.backends`` (see docs/sweep_engine.md):
 
-* (segment, combination) rows that resolve to the *same program* — same
-  segment signature, same segment-relevant clause fields, same resolved
-  sharding mapping — are grouped and compiled once (structural score
-  sharing; with no mesh, all providers collapse per clause).
-* scored groups persist in a cross-project ``score_cache`` keyed by
-  ``(segment_signature, shape, mesh, effective_cid)``, so a repeated sweep
-  of the same config recompiles nothing.
-* an analytic roofline lower bound prunes combinations that provably
-  cannot beat a segment's incumbent best (exact — never changes the
-  argmin); pruned rows are recorded with status ``pruned``.
-* results are written in batched transactions (``record_many``) instead of
-  one commit per row.
+* **Scheduler** — groups (segment, combination) rows that resolve to the
+  *same program* (structural score sharing), resolves whole groups from
+  the persistent cross-project ``score_cache``, and orders the remaining
+  unique programs cheapest-lower-bound-first.
+* **ScoringBackend** — scores unique programs: ``thread`` (PR-1
+  semantics; soft off-main-thread deadline), ``sequential`` (one worker,
+  no pool), or ``process`` (spawned workers; true parallel tracing past
+  the GIL and a *hard* kill-based timeout with requeue-once-then-fail).
+* **Recorder** — fans outcomes back out to member rows, keeps the
+  report accounting, applies the cache policy (transient outcomes are
+  never cached), and writes batched transactions.
+
+Exact lower-bound pruning (never changes the argmin) runs inside the
+backend against shared incumbents.
 """
 from __future__ import annotations
 
-import hashlib
-import json
 import logging
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core.combinator import (Combination, GlobalKnobs, effective_cid,
-                                   enumerate_combinations, mapping_key,
+from repro.core.backends import Recorder, Scheduler, make_backend
+from repro.core.combinator import (Combination, GlobalKnobs,
+                                   enumerate_combinations,
                                    paper_combination_count)
 from repro.core.cost_model import CostTerms
 from repro.core.db import SweepDB
-from repro.core.executor import (DryRunExecutor, ParallelSweepRunner,
+from repro.core.executor import (DryRunExecutor, ParallelSweepRunner,  # noqa: F401  (ParallelSweepRunner re-exported for spies/back-compat)
                                  SweepJob, WallClockExecutor)
 from repro.core.fusion import best_uniform, fuse
 from repro.core.plan import Plan
 from repro.core.providers import all_providers, get_provider
 from repro.core.segment import Segment, fragment
-from repro.core.validator import validate_combination
 
 log = logging.getLogger("repro.tuner")
-
-#: statuses that Continue mode treats as settled (no re-run on resume)
-_SETTLED = ("done", "failed", "invalid", "pruned")
-
-
-def _shape_key(shape: ShapeConfig) -> str:
-    return f"{shape.kind}:{shape.seq_len}x{shape.global_batch}"
-
-
-def _mesh_key(mesh) -> str:
-    if mesh is None:
-        return "local"
-    dev = mesh.devices.flat[0]
-    blob = json.dumps({"axes": list(mesh.axis_names),
-                       "shape": [int(d) for d in mesh.devices.shape],
-                       "platform": str(getattr(dev, "platform", "?"))})
-    return hashlib.sha1(blob.encode()).hexdigest()[:12]
 
 
 @dataclass
@@ -70,9 +54,10 @@ class SweepReport:
     n_failed: int = 0
     n_invalid: int = 0
     n_pruned: int = 0       # rows skipped by the exact lower-bound prune
-    n_scored: int = 0       # programs actually compiled+analyzed this run
+    n_scored: int = 0       # programs that actually compiled+analyzed
     n_cached: int = 0       # rows served from the persistent score cache
-    n_shared: int = 0       # rows that shared an in-run score (beyond rep.)
+    n_shared: int = 0       # rows that shared an in-run compiled score
+    n_transient: int = 0    # rows failed by deadline/crash (retryable)
     paper_count: int = 0
     elapsed_s: float = 0.0
     per_segment: Dict[str, List[Tuple[Combination, CostTerms]]] = \
@@ -83,23 +68,9 @@ class SweepReport:
                 f"done={self.n_done} failed={self.n_failed} "
                 f"invalid={self.n_invalid} pruned={self.n_pruned} "
                 f"scored={self.n_scored} cached={self.n_cached} "
-                f"shared={self.n_shared} "
+                f"shared={self.n_shared} transient={self.n_transient} "
                 f"paper_formula_upper_bound={self.paper_count} "
                 f"elapsed={self.elapsed_s:.1f}s")
-
-
-@dataclass
-class _Group:
-    """All pending (segment, cid) rows that share one program."""
-    seg: Segment
-    combo: Combination
-    signature: str
-    eff_cid: str
-    members: List[Tuple[str, str]] = field(default_factory=list)
-
-    @property
-    def segment_names(self) -> Tuple[str, ...]:
-        return tuple(sorted({s for s, _ in self.members}))
 
 
 class ComParTuner:
@@ -128,13 +99,17 @@ class ComParTuner:
               knobs: GlobalKnobs = GlobalKnobs(),
               boundary_costs: bool = False,
               max_flags: Optional[int] = None,
+              backend: str = "thread",
               workers: int = 1,
               prune: bool = False, prune_margin: float = 0.1,
               use_cache: bool = True, share_scores: bool = True,
               record_batch: int = 64) -> Tuple[Plan, SweepReport]:
         """Run the sweep.  Engine knobs (see docs/sweep_engine.md):
 
-        ``workers``       worker threads scoring unique programs
+        ``backend``       scoring backend: ``thread`` (default) |
+                          ``sequential`` | ``process``
+        ``workers``       workers scoring unique programs (threads or
+                          spawned processes, per ``backend``)
         ``prune``         exact lower-bound pruning on/off
         ``prune_margin``  relative headroom the bound must clear
         ``use_cache``     persistent structural score cache on/off
@@ -151,6 +126,12 @@ class ComParTuner:
             log.warning("prune disabled: exactness doesn't extend to "
                         "boundary-cost (Viterbi) fusion")
             prune = False
+        if backend == "process" and self.mesh is not None:
+            # the wire format reconstructs arch/shape in the worker;
+            # meshes (device handles) don't serialize
+            log.warning("process backend needs a serializable job spec; "
+                        "meshed sweeps fall back to the thread backend")
+            backend = "thread"
         if workers > 1 and not getattr(self.executor, "parallel_safe", True):
             log.warning("workers=%d -> 1: %s timings would contend on the "
                         "device", workers, type(self.executor).__name__)
@@ -185,7 +166,7 @@ class ComParTuner:
         self.db.register_many(self.project, reg)
 
         self._execute(segs, per_seg_combos, rep,
-                      workers=workers, prune=prune,
+                      backend=backend, workers=workers, prune=prune,
                       prune_margin=prune_margin, use_cache=use_cache,
                       share_scores=share_scores, record_batch=record_batch)
 
@@ -211,113 +192,39 @@ class ComParTuner:
     # ------------------------------------------------------------------
     def _execute(self, segs: Sequence[Segment],
                  per_seg_combos: Dict[str, List[Combination]],
-                 rep: SweepReport, *, workers: int, prune: bool,
-                 prune_margin: float, use_cache: bool, share_scores: bool,
-                 record_batch: int):
-        """Score everything not already settled (Continue mode)."""
-        statuses = self.db.statuses(self.project)
-        shape_key = _shape_key(self.shape)
-        # the mesh column doubles as the execution-environment key: scores
-        # from a different executor or hardware model are not interchangeable
-        mesh_key = (f"{_mesh_key(self.mesh)}/"
-                    f"{getattr(self.executor, 'cache_tag', 'unknown')}")
+                 rep: SweepReport, *, backend: str, workers: int,
+                 prune: bool, prune_margin: float, use_cache: bool,
+                 share_scores: bool, record_batch: int):
+        """Score everything not already settled (Continue mode):
+        Scheduler -> ScoringBackend -> Recorder."""
+        from repro.core.backends import env_key, shape_key
+        # ONE key pair for the whole pipeline: the Recorder writes cache
+        # entries and the workers read them under the same sk/mk
+        sk, mk = shape_key(self.shape), env_key(self.mesh, self.executor)
+        scheduler = Scheduler(
+            self.db, self.project, self.cfg, self.shape, self.mesh,
+            self.executor, validate=self.validate,
+            share_scores=share_scores, use_cache=use_cache,
+            shape_key=sk, mesh_key=mk)
+        recorder = Recorder(
+            self.db, self.project, rep, shape_key=sk, mesh_key=mk,
+            use_cache=use_cache, batch=record_batch)
+        work = scheduler.build(segs, per_seg_combos, recorder)
 
-        # incumbent best per segment, seeded from prior rows (resume)
-        incumbents: Dict[str, float] = {}
-        for r in self.db.results(self.project):
-            if r["status"] == "done" and r["cost"]:
-                t = CostTerms.from_dict(r["cost"]).total_s
-                cur = incumbents.get(r["segment"])
-                if cur is None or t < cur:
-                    incumbents[r["segment"]] = t
-
-        # group pending rows by structural program identity
-        groups: Dict[str, _Group] = {}
-        pending_records: List[Dict] = []
-        valid_memo: Dict[str, Tuple[bool, str]] = {}
-        for seg in segs:
-            sig = seg.signature(self.cfg, self.shape)
-            relevant = seg.relevant_clause_fields(self.shape.kind)
-            for c in per_seg_combos[seg.name]:
-                if statuses.get((seg.name, c.cid)) in _SETTLED:
-                    continue
-                if self.validate:
-                    if c.cid not in valid_memo:
-                        valid_memo[c.cid] = validate_combination(self.cfg, c)
-                    ok, msg = valid_memo[c.cid]
-                    if not ok:
-                        pending_records.append(
-                            {"segment": seg.name, "cid": c.cid,
-                             "status": "invalid", "error": msg})
-                        continue
-                ec = effective_cid(
-                    c, relevant, mapping_key(self.cfg, self.mesh, c, seg))
-                key = f"{sig}/{ec}" if share_scores \
-                    else f"{seg.name}/{c.cid}"
-                g = groups.setdefault(key, _Group(seg, c, sig, ec))
-                g.members.append((seg.name, c.cid))
-
-        # persistent cache stage: resolve whole groups without compiling
-        jobs: List[SweepJob] = []
-        for key, g in groups.items():
-            hit = self.db.cache_get(g.signature, shape_key, mesh_key,
-                                    g.eff_cid) if use_cache else None
-            if hit is not None:
-                rep.n_cached += len(g.members)
-                for sname, cid in g.members:
-                    pending_records.append(
-                        {"segment": sname, "cid": cid,
-                         "status": hit["status"], "cost": hit["cost"],
-                         "error": hit["error"]})
-                if hit["status"] == "done" and hit["cost"]:
-                    t = CostTerms.from_dict(hit["cost"]).total_s
-                    for sname in g.segment_names:
-                        if t < incumbents.get(sname, float("inf")):
-                            incumbents[sname] = t
-                continue
-            jobs.append(SweepJob(key, g.seg, g.combo,
-                                 segments=g.segment_names))
-        self.db.record_many(self.project, pending_records)
-        pending_records = []
-
-        # runner stage: compile+score unique programs, fan results out
-        runner = ParallelSweepRunner(
-            self.executor, self.cfg, self.shape, workers=workers,
-            prune=prune, prune_margin=prune_margin)
-        cache_entries: List[Dict] = []
-        for res in runner.run(jobs, incumbents=incumbents):
-            g = groups[res.job.key]
-            cost_d = res.cost.as_dict() if res.cost is not None else None
-            for sname, cid in g.members:
-                pending_records.append(
-                    {"segment": sname, "cid": cid, "status": res.status,
-                     "cost": cost_d, "error": res.error})
-            if res.status == "pruned":
-                rep.n_pruned += len(g.members)
-            else:
-                rep.n_scored += 1
-                rep.n_shared += len(g.members) - 1
-                # pruned outcomes are project-relative (they depend on the
-                # incumbent) and must NOT be cached; neither are deadline
-                # failures, which depend on machine load / timeout_s — a
-                # bigger budget must be able to retry them.  Lowering and
-                # sharding failures ARE deterministic and cacheable.
-                if use_cache and not (res.status == "failed"
-                                      and "deadline" in res.error):
-                    cache_entries.append(
-                        {"signature": g.signature, "shape": shape_key,
-                         "mesh": mesh_key, "cid": g.eff_cid,
-                         "status": res.status, "cost": cost_d,
-                         "error": res.error})
-            if len(pending_records) >= record_batch:
-                self.db.record_many(self.project, pending_records)
-                pending_records = []
-                if use_cache and cache_entries:
-                    self.db.cache_put_many(cache_entries)
-                    cache_entries = []
-        self.db.record_many(self.project, pending_records)
-        if use_cache and cache_entries:
-            self.db.cache_put_many(cache_entries)
+        engine = make_backend(
+            backend, self.executor, self.cfg, self.shape,
+            workers=workers, prune=prune, prune_margin=prune_margin,
+            timeout_s=getattr(self.executor, "timeout_s", None),
+            # workers get a read-only cache view only when the cache is
+            # on — use_cache=False must force real recompiles everywhere
+            db_path=self.db.path if use_cache else None,
+            shape_key=sk, mesh_key=mk)
+        try:
+            for out in engine.run(work.jobs, incumbents=work.incumbents):
+                recorder.outcome(work.groups[out.key], out)
+        finally:
+            engine.close()
+            recorder.flush()
 
     # ------------------------------------------------------------------
     def baselines(self, knobs: GlobalKnobs = GlobalKnobs()):

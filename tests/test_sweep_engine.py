@@ -3,7 +3,10 @@
 Invariants: parallel == sequential, cached == fresh (identical CostTerms,
 zero recompiles), pruning never changes the fused plan, Continue mode
 resumes without recompiling, and the DB/deadline satellite fixes hold.
+Backend suite: sequential, thread and process backends fuse byte-identical
+plans; a hung process worker is killed by the hard timeout.
 """
+import json
 import threading
 import time
 
@@ -16,6 +19,11 @@ from repro.core.cost_model import CostTerms, combo_lower_bound
 from repro.core.executor import CombinationFailed, deadline
 from repro.core.segment import Segment, fragment
 from repro.models.context import SegmentClause
+
+
+def _plan_bytes(plan):
+    """Byte-identity of the fused per-segment decisions."""
+    return json.dumps(plan.to_json()["segments"], sort_keys=True).encode()
 
 SPACE = {"remat": ("none", "full"), "kernel": ("xla",), "block_q": (16, 32),
          "block_k": (16,), "scan_unroll": (1,), "mlstm_chunk": (16,)}
@@ -338,3 +346,228 @@ def test_deadline_off_main_thread_passes_within_budget():
     t.start()
     t.join()
     assert out.get("ok")
+
+
+# --- Scheduler -> Backend -> Recorder pipeline -------------------------------
+
+
+def test_backend_equivalence_sequential_thread_process(sequential):
+    """The acceptance invariant: sequential, thread(2) and process(2)
+    backends fuse byte-identical plans on the smoke config."""
+    plan_ref, rep_ref = sequential
+    ref = _plan_bytes(plan_ref)
+
+    t_seq, _, _ = _tuner(SweepDB(":memory:"), "be-seq")
+    plan_s, rep_s = _sweep(t_seq, backend="sequential", workers=4,
+                           use_cache=False, prune=False)
+    assert _plan_bytes(plan_s) == ref
+
+    t_thr, _, _ = _tuner(SweepDB(":memory:"), "be-thr")
+    plan_t, rep_t = _sweep(t_thr, backend="thread", workers=2,
+                           use_cache=False, prune=False)
+    assert _plan_bytes(plan_t) == ref
+
+    t_prc, _, _ = _tuner(SweepDB(":memory:"), "be-prc")
+    plan_p, rep_p = _sweep(t_prc, backend="process", workers=2,
+                           use_cache=False, prune=False)
+    assert _plan_bytes(plan_p) == ref
+    assert (rep_p.n_done, rep_p.n_failed, rep_p.n_scored, rep_p.n_shared) \
+        == (rep_ref.n_done, 0, rep_ref.n_scored, rep_ref.n_shared)
+
+
+def test_process_backend_hard_timeout_kills_hung_worker():
+    """A worker stuck past timeout_s is killed (requeued once, then failed
+    transient) within ~2 * timeout_s wall-clock — the sweep cannot hang."""
+    from repro.core.backends import JobSpec, ProcessBackend
+    from repro.core.executor import SleepExecutor
+
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    seg = next(s for s in fragment(cfg) if s.kind == "stack")
+    combo = Combination("fsdp", frozenset(), SegmentClause())
+    job = JobSpec("hung", seg, combo, segments=(seg.name,))
+
+    timeout_s = 2.0
+    backend = ProcessBackend(SleepExecutor(sleep_s=600.0), cfg, shape,
+                             workers=2, timeout_s=timeout_s)
+    try:
+        backend.warmup()            # keep jax import out of the timing window
+        t0 = time.monotonic()
+        outs = list(backend.run([job]))
+        elapsed = time.monotonic() - t0
+    finally:
+        backend.close()
+    assert len(outs) == 1
+    out = outs[0]
+    assert out.status == "failed" and out.transient
+    assert out.attempts == 2 and "killed" in out.error
+    # two attempts, each killed at timeout_s * (1 + kill_grace) — the
+    # grace window lets a worker's own SIGALRM report gracefully first
+    budget = 2 * timeout_s * (1 + ProcessBackend.kill_grace) + 1.0
+    assert elapsed < budget, f"hard kill too slow: {elapsed:.1f}s"
+
+
+def test_process_backend_crash_requeues_once_then_fails_transient():
+    from repro.core.backends import JobSpec, ProcessBackend
+    from repro.core.executor import CrashExecutor
+
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    seg = next(s for s in fragment(cfg) if s.kind == "stack")
+    combo = Combination("fsdp", frozenset(), SegmentClause())
+
+    backend = ProcessBackend(CrashExecutor(), cfg, shape, workers=2,
+                             timeout_s=60)
+    try:
+        backend.warmup()
+        outs = list(backend.run(
+            [JobSpec("boom", seg, combo, segments=(seg.name,))]))
+    finally:
+        backend.close()
+    assert len(outs) == 1
+    out = outs[0]
+    assert out.status == "failed" and out.transient and out.attempts == 2
+    assert "crashed" in out.error
+
+
+def test_process_backend_honors_use_cache_off(tmp_path):
+    """use_cache=False must force real recompiles even on a file-backed DB
+    whose score_cache is warm — workers must not get a cache reader."""
+    db = SweepDB(str(tmp_path / "sweep.db"))
+    t1, _, _ = _tuner(db, "warm")
+    _sweep(t1, use_cache=True)                      # populate the cache
+    t2, _, _ = _tuner(db, "nocache")
+    _, rep = _sweep(t2, backend="process", workers=2, use_cache=False)
+    assert rep.n_cached == 0
+    assert rep.n_scored > 0
+    assert rep.n_done == rep.n_combinations
+
+
+def test_jobspec_joboutcome_wire_roundtrip():
+    """The process/remote wire format: pure JSON both ways."""
+    from repro.core.backends import JobOutcome, JobSpec
+
+    seg = Segment("g0", "stack", ("attn", "rec"), 3)
+    combo = Combination("tensor_par", frozenset({"shard_vocab"}),
+                        SegmentClause(remat="dots", block_q=64))
+    spec = JobSpec("k1", seg, combo, segments=("g0", "g3"), bound_s=1.5,
+                   signature="sig", eff_cid="ec")
+    wire = json.loads(json.dumps(spec.to_json()))
+    back = JobSpec.from_json(wire)
+    assert back == spec and isinstance(back.seg.pattern, tuple)
+    assert isinstance(back.segments, tuple)
+
+    out = JobOutcome("k1", "failed", cost=None, error="deadline",
+                     transient=True, attempts=2)
+    assert JobOutcome.from_json(json.loads(json.dumps(out.to_json()))) == out
+
+
+def test_arch_shape_specs_roundtrip_via_registry():
+    import dataclasses
+
+    from repro.configs import (arch_from_spec, arch_to_spec, shape_from_spec,
+                               shape_to_spec)
+
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    # registry fast path: a name-resolvable spec returns the canonical cfg
+    assert arch_from_spec(json.loads(json.dumps(arch_to_spec(cfg)))) == cfg
+    assert shape_from_spec(
+        json.loads(json.dumps(shape_to_spec(shape)))) == shape
+    # ad-hoc configs (fields diverge from the registry) rebuild from fields
+    custom = dataclasses.replace(cfg, d_model=cfg.d_model * 2)
+    rebuilt = arch_from_spec(json.loads(json.dumps(arch_to_spec(custom))))
+    assert rebuilt == custom and isinstance(rebuilt.block_pattern, tuple)
+
+
+def test_deadline_failures_are_transient():
+    """Cacheability is decided by the structured ``transient`` flag on the
+    raising executor, not by substring-matching the error text."""
+    out = {}
+
+    def body():
+        try:
+            with deadline(1):
+                t0 = time.thread_time()
+                while time.thread_time() - t0 < 1.1:
+                    sum(i * i for i in range(1000))
+        except CombinationFailed as e:
+            out["transient"] = e.transient
+
+    t = threading.Thread(target=body)
+    t.start()
+    t.join()
+    assert out["transient"] is True
+    assert CombinationFailed("lowering failed").transient is False
+
+
+def test_transient_rows_counted_not_scored(monkeypatch):
+    """Report accounting: a transient failure neither counts as a scored
+    program nor lands in the cache; deterministic failures are cached but
+    not counted as compiled programs either."""
+    db = SweepDB(":memory:")
+    tuner, _, _ = _tuner(db, "acct")
+    orig = tuner.executor.score_segment
+    calls = {"n": 0}
+
+    def flaky(cfg, shape, seg, combo):
+        # fail two of the stack segment's four unique programs so every
+        # segment keeps at least one valid row and fusion still succeeds
+        if seg.kind == "stack":
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise CombinationFailed("deadline 0s exceeded (synthetic)",
+                                        transient=True)
+            if calls["n"] == 2:
+                raise CombinationFailed("ShardingError: synthetic")
+        return orig(cfg, shape, seg, combo)
+
+    monkeypatch.setattr(tuner.executor, "score_segment", flaky)
+    _, rep = _sweep(tuner, use_cache=True)
+    assert rep.n_transient > 0
+    assert rep.n_failed >= rep.n_transient
+    assert rep.n_scored + rep.n_shared == rep.n_done
+    # cache holds the done programs + the deterministic failure only
+    assert db.cache_size() == rep.n_scored + 1
+    rows = db.results("acct")
+    n_det = sum(1 for r in rows if r["status"] == "failed"
+                and "ShardingError" in r["error"])
+    n_soft = sum(1 for r in rows if r["status"] == "failed"
+                 and "synthetic" in r["error"] and "deadline" in r["error"])
+    assert n_det > 0 and n_soft == rep.n_transient
+
+
+def test_cache_tag_isolation_contract(tmp_path):
+    """The docs/sweep_engine.md contract: an entry written under
+    ``dryrun:tpu-v5e`` must never be served to ``wallclock:r5``."""
+    from repro.core.executor import DryRunExecutor, WallClockExecutor
+
+    assert DryRunExecutor(None).cache_tag == "dryrun:tpu-v5e"
+    assert WallClockExecutor(None).cache_tag == "wallclock:r5"
+
+    db = SweepDB(str(tmp_path / "iso.db"))
+    db.cache_put_many([{"signature": "sig", "shape": "train:32x4",
+                        "mesh": "local/dryrun:tpu-v5e", "cid": "ec",
+                        "status": "done", "cost": {"total_s": 1.0}}])
+    assert db.cache_get("sig", "train:32x4", "local/dryrun:tpu-v5e",
+                        "ec") is not None
+    assert db.cache_get("sig", "train:32x4", "local/wallclock:r5",
+                        "ec") is None
+
+
+def test_build_contexts_records_substitution(caplog):
+    """A plan missing a segment must substitute loudly: warning + meta."""
+    import logging
+
+    from repro.core.plan import Plan, build_contexts
+
+    cfg = get_arch("granite-8b").smoke()
+    combo = Combination("fsdp", frozenset(), SegmentClause())
+    plan = Plan({"g0": combo})
+    with caplog.at_level(logging.WARNING, logger="repro.plan"):
+        ctxs = build_contexts(cfg, None, plan)
+    assert set(ctxs) == {s.name for s in fragment(cfg)}
+    subs = plan.meta["substituted_segments"]
+    assert set(subs) == {"embed", "head"}
+    assert subs["embed"]["from"] == "g0"
+    assert any("substituting" in r.message for r in caplog.records)
