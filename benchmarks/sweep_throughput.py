@@ -13,12 +13,17 @@ added: the same cold engine on the spawned-worker process backend (true
 parallel tracing past the GIL + hard preemptive timeouts) — thread rows
 are always reported alongside, so backend numbers stay comparable.
 
+With ``--globals`` an ``engine-cold-knobaxis2x`` row sweeps a 2-point
+*non-reaching* GlobalKnobs axis (``opt_state_dtype``): twice the rows,
+and the run asserts the engine compiled nothing extra — the knob-
+relevance projection makes the outer axis ~free.
+
 Asserts the fused plans of all runs are identical (the engine is an
 optimization, not an approximation) and reports speedups vs seed-style.
 
   PYTHONPATH=src python benchmarks/sweep_throughput.py [--quick]
       [--arch granite-8b] [--shape train_4k] [--workers N]
-      [--backend thread|process|both] [--assert-speedup X]
+      [--backend thread|process|both] [--assert-speedup X] [--globals]
 """
 from __future__ import annotations
 
@@ -41,7 +46,8 @@ def _sweep(db, project, cfg, shape, space, **kw):
 
 def run(quick: bool = False, arch: str = "granite-8b",
         shape_name: str = "train_4k", workers: int = 0,
-        backend: str = "thread", assert_speedup: float = 0.0):
+        backend: str = "thread", assert_speedup: float = 0.0,
+        globals_axis: bool = False):
     from repro.configs import get_arch, get_shape
     from repro.core.db import SweepDB
 
@@ -100,12 +106,27 @@ def run(quick: bool = False, arch: str = "granite-8b",
             assert plan3.segments == plan0.segments, \
                 "process backend changed the plan!"
             rows.append(("engine-cold-process", t_proc, rep3))
+
+        if globals_axis:
+            # the knob axis: 2x the rows (a swept non-reaching knob),
+            # same number of compiles — the axis must be ~free
+            plan4, rep4, t_knob = _sweep(
+                SweepDB(os.path.join(tmp, "knob.db")), "knob", cfg, shape,
+                space, workers=workers, use_cache=True, prune=True,
+                global_space={"opt_state_dtype": ("float32", "bfloat16")})
+            assert plan4.segments == plan0.segments, \
+                "knob axis changed the per-segment plan!"
+            assert rep4.n_scored == rep1.n_scored, \
+                (f"non-reaching knob axis recompiled: {rep4.n_scored} "
+                 f"vs {rep1.n_scored}")
+            rows.append(("engine-cold-knobaxis2x", t_knob, rep4))
         print(f"# arch={cfg.name} shape={shape.name} combos={n} "
               f"workers={workers} backend={backend} quick={quick}")
         print("name,combos_per_s,seconds,scored,cached,pruned,speedup_vs_seed")
         for name, t, rep in rows:
-            print(f"{name},{n / t:.1f},{t:.2f},{rep.n_scored},"
-                  f"{rep.n_cached},{rep.n_pruned},{t_seed / t:.2f}x")
+            print(f"{name},{rep.n_combinations / t:.1f},{t:.2f},"
+                  f"{rep.n_scored},{rep.n_cached},{rep.n_pruned},"
+                  f"{t_seed / t:.2f}x")
         if assert_speedup:
             assert t_seed / t_cold >= assert_speedup, \
                 f"cold speedup {t_seed / t_cold:.2f}x < {assert_speedup}x"
@@ -123,10 +144,13 @@ def main():
     ap.add_argument("--backend", default="thread",
                     choices=("thread", "process", "both"))
     ap.add_argument("--assert-speedup", type=float, default=0.0)
+    ap.add_argument("--globals", dest="globals_axis", action="store_true",
+                    help="add a 2-point non-reaching GlobalKnobs axis row "
+                         "(2x rows, must compile nothing extra)")
     args = ap.parse_args()
     run(quick=args.quick, arch=args.arch, shape_name=args.shape,
         workers=args.workers, backend=args.backend,
-        assert_speedup=args.assert_speedup)
+        assert_speedup=args.assert_speedup, globals_axis=args.globals_axis)
 
 
 if __name__ == "__main__":

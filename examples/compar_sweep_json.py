@@ -2,8 +2,13 @@
 DB Continue mode: run once, kill it, run again — finished combinations
 are not re-executed.
 
-    PYTHONPATH=src python examples/compar_sweep_json.py
+The ``"globals"`` field is the paper's RTL-routine axis: a GlobalKnobs
+grid swept as an outer dimension of the same sweep, with the fused
+plan's knobs chosen by the joint argmin (see docs/sweep_engine.md).
+
+    PYTHONPATH=src python examples/compar_sweep_json.py [--backend B]
 """
+import argparse
 import json
 import os
 import tempfile
@@ -19,12 +24,12 @@ SWEEP_SPEC = {
     "providers": {"tensor_par": ["shard_vocab"], "fsdp": []},
     # OpenMP directive-clause analogue
     "clauses": {"remat": ["none", "dots"], "block_q": [16]},
-    # RTL-routine analogue
+    # RTL-routine analogue: swept as the outer knob axis
     "globals": {"microbatches": [1, 2]},
 }
 
 
-def main():
+def main(backend: str = "thread"):
     spec_path = os.path.join(tempfile.gettempdir(), "sweep_spec.json")
     with open(spec_path, "w") as f:
         json.dump(SWEEP_SPEC, f, indent=2)
@@ -39,14 +44,18 @@ def main():
         os.remove(db_path)
     db = SweepDB(db_path)
 
+    workers = 1 if backend == "sequential" else (os.cpu_count() or 1)
     # first run: New mode, with the sweep-engine knobs on (parallel
-    # scoring + exact lower-bound pruning; see docs/sweep_engine.md)
+    # scoring + exact lower-bound pruning; see docs/sweep_engine.md) and
+    # the JSON spec's "globals" grid as the outer knob axis
     tuner = ComParTuner(cfg, shape, mesh=None, db=db, project="json-demo",
                         mode="new", executor="dryrun")
     plan, rep = tuner.sweep(providers=providers, clause_space=clause_space,
-                            max_flags=1, workers=os.cpu_count() or 1,
-                            prune=True)
+                            global_space=global_space, max_flags=1,
+                            backend=backend, workers=workers, prune=True)
     print("first run:", rep.summary())
+    assert rep.n_knob_points == 2
+    print("per-knob fused totals:", rep.per_knob_total_s)
 
     # second run: Continue mode — everything cached, near-instant
     db2 = SweepDB(db_path)
@@ -54,12 +63,18 @@ def main():
                          project="json-demo", mode="continue",
                          executor="dryrun")
     plan2, rep2 = tuner2.sweep(providers=providers,
-                               clause_space=clause_space, max_flags=1)
+                               clause_space=clause_space,
+                               global_space=global_space,
+                               max_flags=1, backend=backend)
     print("continue run:", rep2.summary())
     assert rep2.elapsed_s < rep.elapsed_s
-    print("\nfused plan:")
+    assert plan2.knobs == plan.knobs       # the joint argmin is stable
+    print("\nfused plan (knobs chosen by the sweep, not supplied):")
     print(plan2.describe())
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="thread",
+                    choices=("thread", "sequential", "process"))
+    main(**vars(ap.parse_args()))

@@ -5,12 +5,12 @@ from repro.core.backends import (  # noqa: F401
     make_backend,
 )
 from repro.core.combinator import (  # noqa: F401
-    Combination, GlobalKnobs, enumerate_combinations,
-    paper_combination_count,
+    Combination, GlobalKnobs, enumerate_combinations, global_grid,
+    paper_combination_count, row_cid, swept_knob_fields,
 )
 from repro.core.cost_model import CostTerms, Hardware, V5E  # noqa: F401
 from repro.core.db import SweepDB  # noqa: F401
-from repro.core.fusion import best_uniform, fuse  # noqa: F401
+from repro.core.fusion import best_uniform, fuse, fuse_joint  # noqa: F401
 from repro.core.plan import Plan, build_contexts, uniform_plan  # noqa: F401
 from repro.core.segment import Segment, fragment  # noqa: F401
 from repro.core.tuner import ComParTuner, SweepReport  # noqa: F401

@@ -23,7 +23,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, Optional, Sequence, Tuple
 
-from repro.core.combinator import Combination
+from repro.core.combinator import Combination, GlobalKnobs
 from repro.core.segment import Segment
 
 #: structured outcome taxonomy (replaces string-matched statuses)
@@ -39,12 +39,16 @@ STATUSES = (DONE, FAILED, PRUNED)
 class JobSpec:
     """One *unique* program to score (the process/remote wire format).
 
-    ``segments`` lists every segment name whose (segment, combination)
-    rows share this program; ``signature``/``eff_cid`` are the group's
-    persistent-cache key components, shipped so a worker can consult the
-    shared score cache itself.  Field layout is compatible with
-    :class:`repro.core.executor.SweepJob` so the thread backend can feed
-    specs straight into ``ParallelSweepRunner``.
+    ``knobs`` is the GlobalKnobs point the program is built under (None
+    = score without knob effects, the pre-knob behavior for hand-built
+    jobs).  ``segments`` lists the incumbent *scopes* whose rows share
+    this program — Scheduler-built jobs use ``"<knob kid>/<segment>"``
+    keys so pruning compares against the right knob point's incumbents;
+    the tracker treats them as opaque strings.  ``signature``/``eff_cid``
+    are the group's persistent-cache key components, shipped so a worker
+    can consult the shared score cache itself.  Field layout is
+    compatible with :class:`repro.core.executor.SweepJob` so the thread
+    backend can feed specs straight into ``ParallelSweepRunner``.
     """
     key: str
     seg: Segment
@@ -53,12 +57,15 @@ class JobSpec:
     bound_s: float = 0.0
     signature: str = ""
     eff_cid: str = ""
+    knobs: Optional[GlobalKnobs] = None
 
     def to_json(self) -> Dict:
         return {"key": self.key, "seg": self.seg.to_json(),
                 "combo": self.combo.to_json(),
                 "segments": list(self.segments), "bound_s": self.bound_s,
-                "signature": self.signature, "eff_cid": self.eff_cid}
+                "signature": self.signature, "eff_cid": self.eff_cid,
+                "knobs": self.knobs.to_json()
+                if self.knobs is not None else None}
 
     @classmethod
     def from_json(cls, d: Dict) -> "JobSpec":
@@ -66,7 +73,9 @@ class JobSpec:
                    Combination.from_json(d["combo"]),
                    tuple(d.get("segments") or ()),
                    float(d.get("bound_s", 0.0)),
-                   d.get("signature", ""), d.get("eff_cid", ""))
+                   d.get("signature", ""), d.get("eff_cid", ""),
+                   GlobalKnobs.from_json(d["knobs"])
+                   if d.get("knobs") else None)
 
 
 @dataclass
@@ -102,24 +111,32 @@ class JobOutcome:
 
 @dataclass
 class JobGroup:
-    """All pending (segment, cid) rows that share one program."""
+    """All pending (segment, row-cid) rows that share one program.
+
+    ``knobs`` is the representative knob point the program is built
+    under (any member's point projects to the same program, by the
+    effective-cid grouping).  ``scopes`` are the ``"<knob kid>/<segment>"``
+    incumbent keys of every member — the per-knob-point pruning scope.
+    """
     seg: Segment
     combo: Combination
     signature: str
     eff_cid: str
-    members: list = field(default_factory=list)   # [(segment, cid), ...]
-
-    @property
-    def segment_names(self) -> Tuple[str, ...]:
-        return tuple(sorted({s for s, _ in self.members}))
+    members: list = field(default_factory=list)   # [(segment, row_cid), ...]
+    knobs: Optional[GlobalKnobs] = None
+    scopes: set = field(default_factory=set)
 
 
 class IncumbentTracker:
-    """Thread-safe per-segment incumbent bests + the exact prune check.
+    """Thread-safe per-scope incumbent bests + the exact prune check.
 
     A job is pruned only when its analytic lower bound exceeds the
-    incumbent best of *every* member segment by ``prune_margin`` — since
-    bound <= true score, a pruned job can never be the argmin.
+    incumbent best of *every* member scope by ``prune_margin`` — since
+    bound <= true score, a pruned job can never be any scope's argmin.
+    Scope keys are opaque strings; Scheduler-built jobs use
+    ``"<knob kid>/<segment>"`` so an incumbent from one knob point never
+    prunes another point's rows (each knob point needs its own
+    per-segment argmin for the joint solve to stay exact).
     """
 
     def __init__(self, prune: bool = False, prune_margin: float = 0.1):
@@ -174,6 +191,14 @@ def executor_to_spec(executor) -> Dict:
 
     from repro.core.executor import (CrashExecutor, DryRunExecutor,
                                      SleepExecutor, WallClockExecutor)
+    if getattr(executor, "mesh", None) is not None:
+        # a worker would rebuild the executor mesh-less and silently
+        # score different programs under the meshed cache key; the tuner
+        # falls back to the thread backend for meshed sweeps — a direct
+        # ProcessBackend construction must fail just as loudly
+        raise TypeError(
+            f"{type(executor).__name__} holds a mesh: device handles "
+            "don't serialize, use the thread backend for meshed sweeps")
     if isinstance(executor, DryRunExecutor):
         # hw is cache identity (cache_tag embeds hw.name): the worker
         # must score with the parent's hardware model, not the default

@@ -17,9 +17,10 @@ workers fix both — true parallel tracing, and two layers of deadline:
   failure.  The sweep can never hang on one combination.
 
 Worker lifecycle: workers are warm (one jax import + executor per
-process, reused across jobs), crash-detected (an exiting worker fails its
-job through the same requeue-once-then-fail policy), and replaced lazily
-while work remains.  Each worker holds a read-only view of the score
+process, reused across jobs AND across successive ``run()`` calls — the
+pool is only torn down by ``close()``), crash-detected (an exiting worker
+fails its job through the same requeue-once-then-fail policy), and
+replaced lazily while work remains.  Each worker holds a read-only view of the score
 cache (``ScoreCacheReader`` on the WAL DB), so groups another sweep
 process scored mid-run are served without compiling.
 
@@ -57,7 +58,8 @@ def _score_one(executor, cfg, shape, spec: JobSpec, cache, shape_key: str,
             return JobOutcome(spec.key, hit["status"], cost=hit["cost"],
                               error=hit["error"], cached=True)
     try:
-        cost = executor.score_segment(cfg, shape, spec.seg, spec.combo)
+        cost = executor.score_segment(cfg, shape, spec.seg, spec.combo,
+                                      knobs=spec.knobs)
     except CombinationFailed as e:
         return JobOutcome(spec.key, FAILED, error=str(e),
                           transient=getattr(e, "transient", False))
@@ -133,6 +135,8 @@ class ProcessBackend(ScoringBackend):
         from repro.configs.registry import arch_to_spec, shape_to_spec
         self.workers = max(1, int(workers))
         self.timeout_s = timeout_s
+        self.prune = prune
+        self.prune_margin = prune_margin
         self.tracker = IncumbentTracker(prune, prune_margin)
         self._ctx = mp.get_context(start_method)
         self._pool: List[_Worker] = []
@@ -243,7 +247,19 @@ class ProcessBackend(ScoringBackend):
     def run(self, jobs: Sequence[JobSpec],
             incumbents: Optional[Dict[str, float]] = None
             ) -> Iterator[JobOutcome]:
+        """Score ``jobs``; the worker pool survives the call.
+
+        Successive ``run()`` calls on one backend reuse the warm workers
+        (jax already imported, executor built) — that is what keeps the
+        outer knob axis, and repeated sweeps through a cached tuner
+        engine, from paying the ~seconds-per-worker spawn cost per call.
+        Incumbents do NOT carry over: each run gets a fresh tracker
+        seeded only from its own ``incumbents``, so a previous sweep's
+        bests can never prune this one's rows.
+        """
+        self.tracker = IncumbentTracker(self.prune, self.prune_margin)
         self.tracker.seed(incumbents)
+        self._deaths = 0
         queue = deque(jobs)
         attempts: Dict[str, int] = {}
         death_budget = 2 * self.workers + 2 * len(queue) + 4
@@ -319,7 +335,11 @@ class ProcessBackend(ScoringBackend):
                         f"process backend lost {self._deaths} workers; "
                         "giving up instead of respawning forever")
         finally:
-            self.close()
+            # keep the pool warm for the next run(); but if the caller
+            # abandoned the generator mid-run (break / error), workers
+            # still holding jobs would poison the next call — cull them
+            for w in [w for w in self._pool if w.job is not None]:
+                self._kill(w)
 
     # ------------------------------------------------------------------
     def close(self):

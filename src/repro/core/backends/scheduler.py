@@ -17,7 +17,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.backends.base import JobGroup, JobSpec
 from repro.core.backends.recorder import Recorder
-from repro.core.combinator import Combination, effective_cid, mapping_key
+from repro.core.combinator import (Combination, GlobalKnobs, effective_cid,
+                                   mapping_key, row_cid)
 from repro.core.cost_model import CostTerms, V5E, combo_lower_bound
 from repro.core.db import SweepDB
 from repro.core.segment import Segment
@@ -90,42 +91,65 @@ class Scheduler:
     # ------------------------------------------------------------------
     def build(self, segs: Sequence[Segment],
               per_seg_combos: Dict[str, List[Combination]],
-              recorder: Recorder) -> SweepWork:
+              recorder: Recorder,
+              knob_points: Optional[Sequence[GlobalKnobs]] = None
+              ) -> SweepWork:
         """Group, validate, cache-resolve, bound and order the pending
-        rows.  Invalid rows and cache hits are settled through the
-        recorder; everything else becomes a JobSpec."""
+        rows of every (segment, combination, knob point) triple.  Invalid
+        rows and cache hits are settled through the recorder; everything
+        else becomes a JobSpec.
+
+        Rows across knob points whose relevant knob projection agrees
+        land in the same group (one compile); incumbents — and therefore
+        pruning — are scoped per ``"<knob kid>/<segment>"`` so one knob
+        point's best never prunes another point's per-segment argmin.
+        """
+        points = list(knob_points) if knob_points else [GlobalKnobs()]
         work = SweepWork(shape_key=self.shape_key, mesh_key=self.mesh_key)
         statuses = self.db.statuses(self.project)
 
-        # incumbent best per segment, seeded from prior rows (resume)
+        # incumbent best per (knob point, segment), seeded from prior
+        # rows (resume); pre-knob rows carry no knobs = the default point
         for r in self.db.results(self.project):
             if r["status"] == "done" and r["cost"]:
                 t = CostTerms.from_dict(r["cost"]).total_s
-                cur = work.incumbents.get(r["segment"])
+                scope = f"{(r['knobs'] or GlobalKnobs()).kid}/{r['segment']}"
+                cur = work.incumbents.get(scope)
                 if cur is None or t < cur:
-                    work.incumbents[r["segment"]] = t
+                    work.incumbents[scope] = t
 
         # group pending rows by structural program identity
         valid_memo: Dict[str, Tuple[bool, str]] = {}
-        for seg in segs:
-            sig = seg.signature(self.cfg, self.shape)
-            relevant = seg.relevant_clause_fields(self.shape.kind)
-            for c in per_seg_combos[seg.name]:
-                if statuses.get((seg.name, c.cid)) in SETTLED:
-                    continue
-                if self.validate:
-                    if c.cid not in valid_memo:
-                        valid_memo[c.cid] = validate_combination(self.cfg, c)
-                    ok, msg = valid_memo[c.cid]
-                    if not ok:
-                        recorder.invalid(seg.name, c.cid, msg)
+        map_memo: Dict[Tuple[str, str], str] = {}
+        for kn in points:
+            gid = kn.kid
+            for seg in segs:
+                sig = seg.signature(self.cfg, self.shape)
+                relevant = seg.relevant_clause_fields(self.shape.kind)
+                rel_knobs = seg.relevant_knob_fields(self.shape.kind)
+                for c in per_seg_combos[seg.name]:
+                    rid = row_cid(c, kn)
+                    if statuses.get((seg.name, rid)) in SETTLED:
                         continue
-                ec = effective_cid(
-                    c, relevant, mapping_key(self.cfg, self.mesh, c, seg))
-                key = f"{sig}/{ec}" if self.share_scores \
-                    else f"{seg.name}/{c.cid}"
-                g = work.groups.setdefault(key, JobGroup(seg, c, sig, ec))
-                g.members.append((seg.name, c.cid))
+                    if self.validate:
+                        if c.cid not in valid_memo:
+                            valid_memo[c.cid] = \
+                                validate_combination(self.cfg, c)
+                        ok, msg = valid_memo[c.cid]
+                        if not ok:
+                            recorder.invalid(seg.name, rid, msg)
+                            continue
+                    mk = map_memo.get((seg.name, c.cid))
+                    if mk is None:
+                        mk = mapping_key(self.cfg, self.mesh, c, seg)
+                        map_memo[(seg.name, c.cid)] = mk
+                    ec = effective_cid(c, relevant, mk, kn, rel_knobs)
+                    key = f"{sig}/{ec}" if self.share_scores \
+                        else f"{seg.name}/{rid}"
+                    g = work.groups.setdefault(
+                        key, JobGroup(seg, c, sig, ec, knobs=kn))
+                    g.members.append((seg.name, rid))
+                    g.scopes.add(f"{gid}/{seg.name}")
 
         # persistent cache stage: resolve whole groups without compiling
         n_chips = getattr(self.executor, "n_chips", 1)
@@ -138,16 +162,17 @@ class Scheduler:
                 recorder.cache_hit(g, hit)
                 if hit["status"] == "done" and hit["cost"]:
                     t = CostTerms.from_dict(hit["cost"]).total_s
-                    for sname in g.segment_names:
-                        if t < work.incumbents.get(sname, float("inf")):
-                            work.incumbents[sname] = t
+                    for scope in g.scopes:
+                        if t < work.incumbents.get(scope, float("inf")):
+                            work.incumbents[scope] = t
                 del work.groups[key]
                 continue
             work.jobs.append(JobSpec(
-                key, g.seg, g.combo, segments=g.segment_names,
+                key, g.seg, g.combo, segments=tuple(sorted(g.scopes)),
                 bound_s=combo_lower_bound(self.cfg, self.shape, g.seg,
-                                          g.combo, n_chips, hw),
-                signature=g.signature, eff_cid=g.eff_cid))
+                                          g.combo, n_chips, hw,
+                                          knobs=g.knobs),
+                signature=g.signature, eff_cid=g.eff_cid, knobs=g.knobs))
         recorder.flush()
 
         # cheapest-bound-first: incumbents tighten early, pruning bites

@@ -89,28 +89,85 @@ def mapping_key(cfg, mesh, combo: "Combination", seg) -> str:
     return hashlib.sha1(blob.encode()).hexdigest()[:16]
 
 
+#: effective-cid format version.  v2 added the knob projection (the RTL
+#: axis): bumping the version changes every hash, so score_cache rows
+#: written by the pre-knob engine can never alias post-knob keys even
+#: when the projected content is otherwise identical.
+EFFECTIVE_CID_VERSION = 2
+
+
 def effective_cid(combo: "Combination", relevant: FrozenSet[str],
-                  map_key: str) -> str:
+                  map_key: str, knobs: "Optional[GlobalKnobs]" = None,
+                  relevant_knobs: FrozenSet[str] = frozenset()) -> str:
     """The combination id *as seen by one segment's program*: only the
-    clause fields that reach the segment, plus the resolved mapping.
-    Combinations differing in irrelevant fields share one effective cid —
-    the structural-score-cache key component next to the segment
-    signature."""
+    clause fields that reach the segment, the resolved mapping, and the
+    GlobalKnobs fields that reach the segment
+    (``Segment.relevant_knob_fields``).  Combinations — and knob points —
+    differing in irrelevant fields share one effective cid; that is what
+    makes sweeping a non-reaching knob free: every knob point projects to
+    the same cid, so the group compiles once.  This is the
+    structural-score-cache key component next to the segment signature."""
     cl = {f: getattr(combo.clause, f) for f in sorted(relevant)}
-    blob = json.dumps({"map": map_key, "clause": cl},
+    kn = {f: getattr(knobs, f) for f in sorted(relevant_knobs)} \
+        if knobs is not None else {}
+    blob = json.dumps({"v": EFFECTIVE_CID_VERSION, "map": map_key,
+                       "clause": cl, "knobs": kn},
                       sort_keys=True, default=str)
     return hashlib.sha1(blob.encode()).hexdigest()[:16]
 
 
 @dataclass(frozen=True)
 class GlobalKnobs:
-    """Program-wide knobs (ComPar's RTL-routine analogue)."""
+    """Program-wide knobs (ComPar's RTL-routine analogue).
+
+    Since the knob-axis refactor these are a *swept* dimension:
+    ``ComParTuner.sweep(global_space=...)`` enumerates a grid of knob
+    points and the fused plan's ``knobs`` are chosen by the joint
+    argmin, not supplied by the caller.
+    """
     microbatches: int = 1
     donate: bool = True
     opt_state_dtype: str = "float32"
 
     def key(self) -> str:
         return f"mb={self.microbatches},don={self.donate},osd={self.opt_state_dtype}"
+
+    @property
+    def kid(self) -> str:
+        """Content id of this knob point (the knob analogue of
+        ``Combination.cid``)."""
+        blob = json.dumps(vars(self), sort_keys=True, default=str)
+        return hashlib.sha1(blob.encode()).hexdigest()[:10]
+
+    def to_json(self) -> Dict:
+        return dict(vars(self))
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "GlobalKnobs":
+        return cls(**d)
+
+
+def row_cid(combo: "Combination", knobs: Optional[GlobalKnobs] = None) -> str:
+    """DB row id of one (combination, knob point) registration.
+
+    The default knob point keeps the bare combination cid, so projects
+    registered by the pre-knob engine resume seamlessly; any other point
+    qualifies the cid with the knob content id.  Content-determined: two
+    sweeps registering the same (combo, knobs) share the row regardless
+    of how the knob point was specified (fixed ``knobs=`` or a
+    ``global_space`` grid)."""
+    if knobs is None or knobs == GlobalKnobs():
+        return combo.cid
+    return f"{combo.cid}@{knobs.kid}"
+
+
+def swept_knob_fields(space: Optional[Dict[str, Tuple]]) -> Tuple[str, ...]:
+    """The knob fields a global space actually sweeps (>1 value) — the
+    ``n_rtl`` the paper's combination-count formula should be charged
+    for, as opposed to the field count of a fixed knobs instance."""
+    if not space:
+        return ()
+    return tuple(sorted(k for k, v in space.items() if len(v) > 1))
 
 
 def paper_combination_count(flags_per_provider: Sequence[int],

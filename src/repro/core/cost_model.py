@@ -136,12 +136,22 @@ def segment_forward_flops(cfg: ArchConfig, shape: ShapeConfig,
 
 
 def combo_lower_bound(cfg: ArchConfig, shape: ShapeConfig, segment,
-                      combo, n_chips: int = 1, hw: Hardware = V5E) -> float:
-    """Roofline lower bound (seconds) on scoring (segment, combination).
+                      combo, n_chips: int = 1, hw: Hardware = V5E,
+                      knobs=None) -> float:
+    """Roofline lower bound (seconds) on scoring (segment, combination)
+    under one GlobalKnobs point.
 
     Uses only the compute term: the memory-traffic estimator in
     ``runtime.hlo`` is not guaranteed to count parameter reads, so a
     byte-based term could overshoot the true score and break exactness.
+
+    ``knobs`` keeps pruning exact across the swept knob axis.  The
+    current terms are knob-invariant *by soundness*: microbatching
+    still processes every token once per fwd/bwd pass (the accumulation
+    adds and the 1/mb scale only add FLOPs), and donation /
+    ``opt_state_dtype`` never remove dot ops — so the bound below holds
+    for every knob point.  A future knob that legitimately lowers the
+    floor (e.g. reduced-precision matmuls) must discount here.
     """
     fwd = segment_forward_flops(cfg, shape, segment)
     if shape.kind != "train":

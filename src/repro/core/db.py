@@ -12,7 +12,7 @@ import sqlite3
 import time
 from typing import Dict, Iterable, List, Optional, Tuple
 
-from repro.core.combinator import Combination
+from repro.core.combinator import Combination, GlobalKnobs, row_cid
 
 _SCHEMA = """
 CREATE TABLE IF NOT EXISTS projects (
@@ -102,15 +102,31 @@ class SweepDB:
     def register(self, project: str, segment: str, combo: Combination):
         self.register_many(project, [(segment, combo)])
 
-    def register_many(self, project: str,
-                      items: Iterable[Tuple[str, Combination]]):
-        """Register (segment, combination) rows in ONE transaction."""
+    def register_many(self, project: str, items: Iterable[Tuple]):
+        """Register (segment, combination[, knobs]) rows in ONE
+        transaction.
+
+        Items are ``(segment, combo)`` 2-tuples or
+        ``(segment, combo, knobs)`` 3-tuples — the knob axis.  The row id
+        is ``combinator.row_cid(combo, knobs)`` (the bare combination cid
+        for the default/absent knob point, so pre-knob projects resume
+        unchanged) and the spec records the knob point for per-knob
+        fusion grouping.
+        """
         now = time.time()
+        rows = []
+        for item in items:
+            seg, c = item[0], item[1]
+            kn = item[2] if len(item) > 2 else None
+            spec = c.to_json()
+            if kn is not None:
+                spec["knobs"] = kn.to_json()
+            rows.append((project, seg, row_cid(c, kn),
+                         json.dumps(spec), now))
         self.conn.executemany(
             "INSERT OR IGNORE INTO combinations "
             "(project, segment, cid, spec, updated) VALUES (?,?,?,?,?)",
-            [(project, seg, c.cid, json.dumps(c.to_json()), now)
-             for seg, c in items])
+            rows)
         self.conn.commit()
 
     def status(self, project: str, segment: str, cid: str) -> Optional[str]:
@@ -203,8 +219,11 @@ class SweepDB:
         q += " ORDER BY rowid"
         out = []
         for seg, cid, spec, status, cost, error in self.conn.execute(q, args):
+            sd = json.loads(spec)
             out.append({"segment": seg, "cid": cid,
-                        "combo": Combination.from_json(json.loads(spec)),
+                        "combo": Combination.from_json(sd),
+                        "knobs": GlobalKnobs.from_json(sd["knobs"])
+                        if sd.get("knobs") else None,
                         "status": status,
                         "cost": json.loads(cost) if cost else None,
                         "error": error})

@@ -23,7 +23,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core.combinator import Combination
+from repro.core.combinator import Combination, GlobalKnobs
 from repro.core.cost_model import CostTerms, Hardware, V5E, combo_lower_bound
 from repro.core.segment import Segment
 from repro.core.timer import segment_program
@@ -100,10 +100,12 @@ def _mesh_scope(mesh):
             yield
 
 
-def lower_and_compile(fn, args, shardings, mesh):
+def lower_and_compile(fn, args, shardings, mesh, donate_argnums=()):
     kw = {}
     if mesh is not None and shardings is not None:
         kw["in_shardings"] = shardings
+    if donate_argnums:
+        kw["donate_argnums"] = tuple(donate_argnums)
     jitted = jax.jit(fn, **kw)
     if mesh is not None:
         with _mesh_scope(mesh):
@@ -176,13 +178,19 @@ class DryRunExecutor:
         return f"dryrun:{self.hw.name}"
 
     def score_segment(self, cfg: ArchConfig, shape: ShapeConfig,
-                      seg: Segment, combo: Combination) -> CostTerms:
+                      seg: Segment, combo: Combination,
+                      knobs: Optional[GlobalKnobs] = None) -> CostTerms:
+        # donation is part of the lowered program (buffer aliasing), so a
+        # swept `donate` knob genuinely changes what is scored; safe here
+        # because the dry-run path never executes the compiled artifact
+        donate = (0,) if (shape.kind == "train" and knobs is not None
+                          and knobs.donate) else ()
         with deadline(self.timeout_s):
             try:
                 fn, args, shardings = segment_program(
-                    cfg, shape, seg, combo, self.mesh)
+                    cfg, shape, seg, combo, self.mesh, knobs=knobs)
                 lowered, compiled = lower_and_compile(
-                    fn, args, shardings, self.mesh)
+                    fn, args, shardings, self.mesh, donate_argnums=donate)
             except CombinationFailed:
                 raise
             except Exception as e:  # sharding/lowering failure = invalid combo
@@ -208,11 +216,18 @@ class WallClockExecutor:
         return f"wallclock:r{self.repeats}"
 
     def score_segment(self, cfg: ArchConfig, shape: ShapeConfig,
-                      seg: Segment, combo: Combination) -> CostTerms:
+                      seg: Segment, combo: Combination,
+                      knobs: Optional[GlobalKnobs] = None) -> CostTerms:
+        # NOTE: no buffer donation here — the timing loop re-calls the
+        # compiled program with the same concrete buffers, and donated
+        # arrays are deleted after the first call.  A swept `donate`
+        # point therefore scores identically under wallclock (relevance
+        # is over-inclusive, which costs a duplicate compile, never
+        # correctness).
         with deadline(self.timeout_s):
             try:
                 fn, args, shardings = segment_program(
-                    cfg, shape, seg, combo, self.mesh)
+                    cfg, shape, seg, combo, self.mesh, knobs=knobs)
                 concrete = jax.tree.map(
                     lambda s: _materialize(s), args,
                     is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
@@ -255,7 +270,8 @@ class SleepExecutor:
         return f"sleep:{self.sleep_s}"
 
     def score_segment(self, cfg: ArchConfig, shape: ShapeConfig,
-                      seg: Segment, combo: Combination) -> CostTerms:
+                      seg: Segment, combo: Combination,
+                      knobs: Optional[GlobalKnobs] = None) -> CostTerms:
         time.sleep(self.sleep_s)
         return CostTerms(compute_s=self.sleep_s)
 
@@ -276,7 +292,8 @@ class CrashExecutor:
         return "crash"
 
     def score_segment(self, cfg: ArchConfig, shape: ShapeConfig,
-                      seg: Segment, combo: Combination) -> CostTerms:
+                      seg: Segment, combo: Combination,
+                      knobs: Optional[GlobalKnobs] = None) -> CostTerms:
         import os
         os._exit(13)
 
@@ -344,7 +361,7 @@ class ParallelSweepRunner:
                                    f"incumbent best")
         try:
             cost = self.executor.score_segment(
-                self.cfg, self.shape, job.seg, job.combo)
+                self.cfg, self.shape, job.seg, job.combo, knobs=job.knobs)
         except CombinationFailed as e:
             return JobResult(job, "failed", error=str(e),
                              transient=getattr(e, "transient", False))
@@ -369,7 +386,8 @@ class ParallelSweepRunner:
         for job in jobs:
             if job.bound_s <= 0.0:      # Scheduler-built jobs arrive bounded
                 job.bound_s = combo_lower_bound(
-                    self.cfg, self.shape, job.seg, job.combo, n_chips, hw)
+                    self.cfg, self.shape, job.seg, job.combo, n_chips, hw,
+                    knobs=job.knobs)
         ordered = sorted(jobs, key=lambda j: (j.bound_s, j.key))
 
         if self.workers == 1:

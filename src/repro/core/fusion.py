@@ -9,6 +9,13 @@ adjacent segments with different activation layouts pay a resharding
 collective that ComPar's shared-memory setting never sees.  We charge
 layout transitions and solve the resulting chain by Viterbi DP — still
 exact, now layout-transition-aware.
+
+Knob axis (``fuse_joint``): GlobalKnobs — the paper's RTL-routine
+dimension — is swept as an outer axis.  Knobs are program-wide, so the
+per-segment (or Viterbi) solves are independent *given* a knob point;
+the joint ``(segment, combination, knobs)`` argmin therefore decomposes
+exactly into one inner solve per knob point plus an outer argmin, and
+the returned plan's ``knobs`` are chosen, not supplied.
 """
 from __future__ import annotations
 
@@ -121,6 +128,47 @@ def fuse(cfg: ArchConfig, shape: ShapeConfig, mesh,
     return Plan(chosen, knobs,
                 {"per_segment_s": meta_cost, "predicted_total_s": total,
                  "fusion": "viterbi-boundary"})
+
+
+def fuse_joint(cfg: ArchConfig, shape: ShapeConfig, mesh,
+               per_knob: Dict[str, Dict[str, List[Tuple[Combination,
+                                                        CostTerms]]]],
+               knob_points: List[GlobalKnobs], *,
+               boundary_costs: bool = False, hw: Hardware = V5E) -> Plan:
+    """Joint argmin over ``(segment, combination, knobs)``.
+
+    ``per_knob``: knob kid -> (segment name -> valid [(combo, cost)]).
+    Solves each knob point's chain with :func:`fuse` (per-segment argmin,
+    or Viterbi when ``boundary_costs``), then takes the outer argmin of
+    the predicted totals.  Ties break to the earliest point in
+    ``knob_points`` order (strict ``<``), which is deterministic across
+    backends.  A knob point missing a valid combination for some segment
+    is skipped; if *every* point is unfusable the error lists each
+    point's failure.
+    """
+    best: Optional[Plan] = None
+    totals: Dict[str, float] = {}
+    failures = []
+    for kn in knob_points:
+        table = per_knob.get(kn.kid) or {}
+        try:
+            plan = fuse(cfg, shape, mesh, table, kn,
+                        boundary_costs=boundary_costs, hw=hw)
+        except ValueError as e:
+            failures.append(f"[{kn.key()}] {e}")
+            continue
+        totals[kn.key()] = plan.meta["predicted_total_s"]
+        if best is None or (plan.meta["predicted_total_s"]
+                            < best.meta["predicted_total_s"]):
+            best = plan
+    if best is None:
+        raise ValueError("no knob point has a valid combination for every "
+                         "segment: " + "; ".join(failures))
+    if len(knob_points) > 1:
+        best.meta["fusion"] += "+knob-argmin"
+    best.meta["knob_points"] = len(knob_points)
+    best.meta["per_knob_total_s"] = totals
+    return best
 
 
 def best_uniform(cfg: ArchConfig,

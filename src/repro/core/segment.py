@@ -92,6 +92,24 @@ class Segment:
             fields |= {"kernel", "mlstm_chunk"}
         return frozenset(fields)
 
+    def relevant_knob_fields(self, shape_kind: str) -> FrozenSet[str]:
+        """The GlobalKnobs fields that can alter this segment's *program*
+        (the knob analogue of :meth:`relevant_clause_fields`).
+
+        ``microbatches`` and ``donate`` reshape the built/jitted train
+        program (gradient-accumulation scan; buffer donation at jit) on
+        every segment kind — training wraps them all in a backward pass.
+        Inference shapes (prefill/decode) have neither, so no knob
+        reaches their programs and sweeping any knob is free there.
+        ``opt_state_dtype`` never appears: the optimizer update is not
+        part of any segment program, so sweeping it adds zero compiles on
+        every shape — knob points differing only in it share one
+        effective cid per segment.
+        """
+        if shape_kind != "train":
+            return frozenset()
+        return frozenset({"microbatches", "donate"})
+
 
 def fragment(cfg: ArchConfig) -> Tuple[Segment, ...]:
     """Enumerate and annotate all segments (the Fragmentor)."""

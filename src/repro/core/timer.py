@@ -15,8 +15,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 
+from typing import Optional
+
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core.combinator import Combination
+from repro.core.combinator import Combination, GlobalKnobs
 from repro.core.plan import dp_shards
 from repro.core.providers import get_provider
 from repro.core.segment import Segment
@@ -39,12 +41,18 @@ def _ctx_for(cfg, mesh, combo: Combination, seg: Segment,
 
 
 def segment_program(cfg: ArchConfig, shape: ShapeConfig, seg: Segment,
-                    combo: Combination, mesh, *, interpret: bool = True
+                    combo: Combination, mesh, *, interpret: bool = True,
+                    knobs: Optional[GlobalKnobs] = None
                     ) -> Tuple[Callable, Tuple, Dict]:
     """Build (fn, abstract_args, arg_shardings) for one segment.
 
     ``fn`` captures the segment's compute under the combination; for
-    training shapes it includes the backward pass.
+    training shapes it includes the backward pass, and — when ``knobs``
+    are given — the gradient-accumulation microbatch scan (the per-step
+    batch is reshaped to ``(microbatches, B/microbatches, ...)`` and the
+    fwd+bwd scanned over the slices, mirroring ``train.step``).  Only the
+    knob fields in ``Segment.relevant_knob_fields`` reach the program;
+    inference shapes ignore knobs entirely.
     """
     ctx = _ctx_for(cfg, mesh, combo, seg, interpret)
     specs = model_specs(cfg)
@@ -53,6 +61,7 @@ def segment_program(cfg: ArchConfig, shape: ShapeConfig, seg: Segment,
     dt = jnp.dtype(cfg.dtype)
     train = shape.kind == "train"
     decode = shape.kind == "decode"
+    mb = knobs.microbatches if (train and knobs is not None) else 1
 
     def shard(ax, shp):
         if mesh is None:
@@ -73,7 +82,7 @@ def segment_program(cfg: ArchConfig, shape: ShapeConfig, seg: Segment,
         def fn(p, tokens):
             return embed_tokens(p, tokens, cfg, ctx)
         if train:
-            fn = _with_bwd(fn, argnums=(0,))
+            fn = _with_microbatches(_with_bwd(fn, argnums=(0,)), mb)
         return fn, (p_abs, tok), (p_sh, shard(("batch", "seq"), tok_shape))
 
     if seg.kind == "head":
@@ -89,7 +98,8 @@ def segment_program(cfg: ArchConfig, shape: ShapeConfig, seg: Segment,
             loss, _ = softmax_xent(logits, tgt)
             return loss
         if train:
-            fn = _with_bwd(fn, argnums=(0, 1), scalar=True)
+            fn = _with_microbatches(
+                _with_bwd(fn, argnums=(0, 1), scalar=True), mb)
         return fn, (p_abs, x_sds), (p_sh, x_sh)
 
     # --- stack segment -------------------------------------------------
@@ -131,7 +141,7 @@ def segment_program(cfg: ArchConfig, shape: ShapeConfig, seg: Segment,
         y, aux = _run_group(x, p, group, cfg, ctx, positions)
         return y
     if train:
-        fn = _with_bwd(fn, argnums=(0, 1))
+        fn = _with_microbatches(_with_bwd(fn, argnums=(0, 1)), mb)
     return fn, (p_abs, x_sds), (p_sh, x_sh)
 
 
@@ -142,6 +152,36 @@ def _pshard(spec_tree, rules: Rules, mesh):
     from jax.sharding import PartitionSpec
     return jax.tree.map(lambda s: NamedSharding(mesh, s), ps,
                         is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def _with_microbatches(fn, mb: int):
+    """Gradient-accumulation analogue for segment scoring: split the batch
+    (arg 1; arg 0 is always the segment's params) into ``mb`` slices,
+    scan the fwd+bwd ``fn`` over them and average the grads — the same
+    program shape ``train.step`` builds, so a swept microbatch count is
+    scored with the compute/memory profile it will actually run with.
+    Summing (rather than stacking) the data-side grads is fine here: the
+    wrapper exists to shape the compiled program for cost attribution,
+    not to train."""
+    if mb <= 1:
+        return fn
+
+    @functools.wraps(fn)
+    def wrapped(p, x):
+        if x.shape[0] % mb:
+            raise ValueError(
+                f"global_batch {x.shape[0]} not divisible by "
+                f"microbatches={mb}")
+        xs = x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+        acc0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            jax.eval_shape(fn, p, xs[0]))
+
+        def step(acc, xi):
+            return jax.tree.map(jnp.add, acc, fn(p, xi)), None
+
+        acc, _ = jax.lax.scan(step, acc0, xs)
+        return jax.tree.map(lambda g: g / mb, acc)
+    return wrapped
 
 
 def _with_bwd(fn, argnums=(0,), scalar: bool = False):

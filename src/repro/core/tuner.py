@@ -1,8 +1,10 @@
 """ComParX tuner: the paper's end-to-end workflow (Fig. 1).
 
 Fragmentor -> Combinator (-> DB register) -> Parallelizer+Executor per
-combination (-> DB record, Continue-mode resumable) -> black-box validation
--> Optimal Plan Generator -> fused Plan.
+(combination, knob point) (-> DB record, Continue-mode resumable) ->
+black-box validation -> Optimal Plan Generator -> fused Plan whose
+``knobs`` are the joint argmin over the swept GlobalKnobs grid
+(``sweep(global_space=...)`` — the paper's RTL-routine axis).
 
 The sweep execution core is the three-stage pipeline of
 ``repro.core.backends`` (see docs/sweep_engine.md):
@@ -32,13 +34,14 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.backends import Recorder, Scheduler, make_backend
 from repro.core.combinator import (Combination, GlobalKnobs,
-                                   enumerate_combinations,
-                                   paper_combination_count)
+                                   enumerate_combinations, global_grid,
+                                   paper_combination_count, row_cid,
+                                   swept_knob_fields)
 from repro.core.cost_model import CostTerms
 from repro.core.db import SweepDB
 from repro.core.executor import (DryRunExecutor, ParallelSweepRunner,  # noqa: F401  (ParallelSweepRunner re-exported for spies/back-compat)
                                  SweepJob, WallClockExecutor)
-from repro.core.fusion import best_uniform, fuse
+from repro.core.fusion import best_uniform, fuse, fuse_joint  # noqa: F401  (fuse re-exported)
 from repro.core.plan import Plan
 from repro.core.providers import all_providers, get_provider
 from repro.core.segment import Segment, fragment
@@ -49,7 +52,7 @@ log = logging.getLogger("repro.tuner")
 @dataclass
 class SweepReport:
     project: str
-    n_combinations: int
+    n_combinations: int     # realized registered rows (incl. the knob axis)
     n_done: int = 0
     n_failed: int = 0
     n_invalid: int = 0
@@ -58,17 +61,22 @@ class SweepReport:
     n_cached: int = 0       # rows served from the persistent score cache
     n_shared: int = 0       # rows that shared an in-run compiled score
     n_transient: int = 0    # rows failed by deadline/crash (retryable)
-    paper_count: int = 0
+    n_knob_points: int = 1  # GlobalKnobs points swept (the RTL axis)
+    paper_count: int = 0    # the paper's formula, an upper bound
     elapsed_s: float = 0.0
+    #: the winning knob point's per-segment valid rows
     per_segment: Dict[str, List[Tuple[Combination, CostTerms]]] = \
         field(default_factory=dict)
+    #: knobs.key() -> fused predicted total, every fusable knob point
+    per_knob_total_s: Dict[str, float] = field(default_factory=dict)
 
     def summary(self) -> str:
-        return (f"project={self.project} combos={self.n_combinations} "
+        return (f"project={self.project} knob_points={self.n_knob_points} "
                 f"done={self.n_done} failed={self.n_failed} "
                 f"invalid={self.n_invalid} pruned={self.n_pruned} "
                 f"scored={self.n_scored} cached={self.n_cached} "
                 f"shared={self.n_shared} transient={self.n_transient} "
+                f"realized={self.n_combinations} "
                 f"paper_formula_upper_bound={self.paper_count} "
                 f"elapsed={self.elapsed_s:.1f}s")
 
@@ -92,11 +100,14 @@ class ComParTuner:
         else:
             raise ValueError(executor)
         self.validate = validate
+        #: cached ScoringBackends (warm process pools) — see _engine()
+        self._engines: Dict[Tuple, object] = {}
 
     # ------------------------------------------------------------------
     def sweep(self, providers: Optional[Sequence[str]] = None,
               clause_space=None, *, budget: Optional[int] = None,
               knobs: GlobalKnobs = GlobalKnobs(),
+              global_space: Optional[Dict[str, Tuple]] = None,
               boundary_costs: bool = False,
               max_flags: Optional[int] = None,
               backend: str = "thread",
@@ -106,6 +117,15 @@ class ComParTuner:
               record_batch: int = 64) -> Tuple[Plan, SweepReport]:
         """Run the sweep.  Engine knobs (see docs/sweep_engine.md):
 
+        ``global_space``  GlobalKnobs grid to sweep as the outer axis
+                          (the paper's RTL-routine dimension), e.g.
+                          ``{"microbatches": (1, 2)}`` — unlisted fields
+                          stay at their defaults.  The returned plan's
+                          ``knobs`` are the joint argmin across the
+                          grid.  Default ``None`` = today's single fixed
+                          point (the ``knobs`` argument, which is
+                          otherwise ignored).  The grid is not
+                          ``budget``-sampled.
         ``backend``       scoring backend: ``thread`` (default) |
                           ``sequential`` | ``process``
         ``workers``       workers scoring unique programs (threads or
@@ -119,6 +139,8 @@ class ComParTuner:
         ``record_batch``  DB rows per write transaction
         """
         t0 = time.time()
+        points = global_grid(global_space) if global_space is not None \
+            else [knobs]
         if prune and boundary_costs:
             # the lower-bound certificate covers the per-segment argmin
             # only; under Viterbi fusion a locally-dominated combination
@@ -148,43 +170,58 @@ class ComParTuner:
         combos = enumerate_combinations(providers, clause_space,
                                         budget=budget, max_flags=max_flags)
         rep = SweepReport(
-            self.project, n_combinations=0,
+            self.project, n_combinations=0, n_knob_points=len(points),
             paper_count=paper_combination_count(
                 [len(get_provider(p).flags) for p in providers],
-                n_rtl=len(vars(knobs)),
+                # charge the formula's rtl term for what is actually
+                # swept, not the field count of a fixed knobs instance
+                n_rtl=len(swept_knob_fields(global_space)),
                 n_d=len(clause_space or {}) or 6))
 
-        # Combinator: register every (segment, combination), one transaction
+        # Combinator: register every (segment, combination, knob point),
+        # one transaction
         per_seg_combos: Dict[str, List[Combination]] = {}
-        reg: List[Tuple[str, Combination]] = []
         for seg in segs:
-            cs = [c for c in combos
-                  if get_provider(c.provider).applicable(self.cfg, seg)]
-            per_seg_combos[seg.name] = cs
-            rep.n_combinations += len(cs)
-            reg.extend((seg.name, c) for c in cs)
+            per_seg_combos[seg.name] = [
+                c for c in combos
+                if get_provider(c.provider).applicable(self.cfg, seg)]
+        reg: List[Tuple[str, Combination, GlobalKnobs]] = []
+        for kn in points:
+            for seg in segs:
+                reg.extend((seg.name, c, kn)
+                           for c in per_seg_combos[seg.name])
+        rep.n_combinations = len(reg)
         self.db.register_many(self.project, reg)
 
-        self._execute(segs, per_seg_combos, rep,
+        self._execute(segs, per_seg_combos, points, rep,
                       backend=backend, workers=workers, prune=prune,
                       prune_margin=prune_margin, use_cache=use_cache,
                       share_scores=share_scores, record_batch=record_batch)
 
-        # collect valid results
-        for seg in segs:
-            rows = self.db.results(self.project, seg.name)
-            good = [(r["combo"], CostTerms.from_dict(r["cost"]))
-                    for r in rows if r["status"] == "done"]
-            rep.per_segment[seg.name] = good
+        # collect valid results per (knob point, segment)
+        by_rid = {(r["segment"], r["cid"]): r
+                  for r in self.db.results(self.project)}
+        per_knob: Dict[str, Dict[str, List[Tuple[Combination, CostTerms]]]] \
+            = {}
+        for kn in points:
+            table = per_knob.setdefault(kn.kid, {})
+            for seg in segs:
+                good = table.setdefault(seg.name, [])
+                for c in per_seg_combos[seg.name]:
+                    r = by_rid.get((seg.name, row_cid(c, kn)))
+                    if r is not None and r["status"] == "done" and r["cost"]:
+                        good.append((c, CostTerms.from_dict(r["cost"])))
         counts = self.db.done_count(self.project)
         rep.n_done = counts.get("done", 0)
         rep.n_failed = counts.get("failed", 0)
         rep.n_invalid = counts.get("invalid", 0)
         rep.n_pruned = counts.get("pruned", 0)
 
-        plan = fuse(self.cfg, self.shape, self.mesh, rep.per_segment,
-                    knobs, boundary_costs=boundary_costs)
+        plan = fuse_joint(self.cfg, self.shape, self.mesh, per_knob,
+                          points, boundary_costs=boundary_costs)
         plan.meta["project"] = self.project
+        rep.per_segment = per_knob[plan.knobs.kid]
+        rep.per_knob_total_s = dict(plan.meta["per_knob_total_s"])
         rep.elapsed_s = time.time() - t0
         log.info(rep.summary())
         return plan, rep
@@ -192,6 +229,7 @@ class ComParTuner:
     # ------------------------------------------------------------------
     def _execute(self, segs: Sequence[Segment],
                  per_seg_combos: Dict[str, List[Combination]],
+                 knob_points: Sequence[GlobalKnobs],
                  rep: SweepReport, *, backend: str, workers: int,
                  prune: bool, prune_margin: float, use_cache: bool,
                  share_scores: bool, record_batch: int):
@@ -209,40 +247,107 @@ class ComParTuner:
         recorder = Recorder(
             self.db, self.project, rep, shape_key=sk, mesh_key=mk,
             use_cache=use_cache, batch=record_batch)
-        work = scheduler.build(segs, per_seg_combos, recorder)
+        work = scheduler.build(segs, per_seg_combos, recorder,
+                               knob_points=knob_points)
 
-        engine = make_backend(
-            backend, self.executor, self.cfg, self.shape,
-            workers=workers, prune=prune, prune_margin=prune_margin,
-            timeout_s=getattr(self.executor, "timeout_s", None),
-            # workers get a read-only cache view only when the cache is
-            # on — use_cache=False must force real recompiles everywhere
-            db_path=self.db.path if use_cache else None,
+        engine, transient_engine = self._engine(
+            backend, workers=workers, prune=prune,
+            prune_margin=prune_margin, use_cache=use_cache,
             shape_key=sk, mesh_key=mk)
         try:
             for out in engine.run(work.jobs, incumbents=work.incumbents):
                 recorder.outcome(work.groups[out.key], out)
         finally:
-            engine.close()
+            if transient_engine:
+                engine.close()
             recorder.flush()
 
     # ------------------------------------------------------------------
-    def baselines(self, knobs: GlobalKnobs = GlobalKnobs()):
+    def _engine(self, backend: str, *, workers: int, prune: bool,
+                prune_margin: float, use_cache: bool,
+                shape_key: str, mesh_key: str):
+        """Build a ScoringBackend; cache process backends for warm-worker
+        reuse.
+
+        A process pool pays ~seconds of jax import per spawned worker, so
+        it is kept alive across ``sweep()`` calls on one tuner (same
+        engine parameters) and only torn down by :meth:`close`.  Thread/
+        sequential backends hold no resources and are built per sweep.
+        Returns ``(engine, transient)``; transient engines are closed by
+        the caller after the run."""
+        kw = dict(
+            workers=workers, prune=prune, prune_margin=prune_margin,
+            timeout_s=getattr(self.executor, "timeout_s", None),
+            # workers get a read-only cache view only when the cache is
+            # on — use_cache=False must force real recompiles everywhere
+            db_path=self.db.path if use_cache else None,
+            shape_key=shape_key, mesh_key=mesh_key)
+        if backend != "process":
+            return make_backend(backend, self.executor, self.cfg,
+                                self.shape, **kw), True
+        key = (backend,) + tuple(sorted(kw.items()))
+        engine = self._engines.get(key)
+        if engine is None:
+            engine = make_backend(backend, self.executor, self.cfg,
+                                  self.shape, **kw)
+            self._engines[key] = engine
+        return engine, False
+
+    def close(self):
+        """Release cached scoring backends (warm process-worker pools).
+        Idempotent; also runs on GC and via the context-manager exit."""
+        engines, self._engines = self._engines, {}
+        for engine in engines.values():
+            engine.close()
+
+    def __enter__(self) -> "ComParTuner":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    # ------------------------------------------------------------------
+    def baselines(self, knobs: GlobalKnobs = GlobalKnobs(), *,
+                  global_space: Optional[Dict[str, Tuple]] = None):
         """Per-provider best uniform plans + the fused plan comparison
-        (the numbers behind the Fig. 2/4 analogues)."""
+        (the numbers behind the Fig. 2/4 analogues).
+
+        With ``global_space`` the baseline is per provider the best
+        uniform plan over *any* swept knob point — the fair comparison
+        against a joint-argmin fused plan.  Rows recorded by the pre-knob
+        engine (no knob spec) count as the default point."""
+        points = global_grid(global_space) if global_space is not None \
+            else [knobs]
         segs = fragment(self.cfg)
-        rows = {s.name: [(r["combo"], CostTerms.from_dict(r["cost"]))
-                         for r in self.db.results(self.project, s.name)
-                         if r["status"] == "done"]
-                for s in segs}
+        by_gid: Dict[str, Dict[str, List[Tuple[Combination, CostTerms]]]] \
+            = {}
+        for r in self.db.results(self.project):
+            if r["status"] != "done" or not r["cost"]:
+                continue
+            gid = (r["knobs"] or GlobalKnobs()).kid
+            by_gid.setdefault(gid, {}).setdefault(r["segment"], []).append(
+                (r["combo"], CostTerms.from_dict(r["cost"])))
         out = {}
         for pname in all_providers():
-            per_seg = {sn: [(c, t) for c, t in rs if c.provider == pname]
-                       for sn, rs in rows.items()}
-            if all(per_seg.values()):
+            best = None
+            for kn in points:
+                rows = by_gid.get(kn.kid) or {}
+                per_seg = {s.name: [(c, t) for c, t in rows.get(s.name, [])
+                                    if c.provider == pname] for s in segs}
+                if not all(per_seg.values()):
+                    continue
                 try:
-                    plan, total = best_uniform(self.cfg, per_seg, knobs)
-                    out[pname] = total
+                    _, total = best_uniform(self.cfg, per_seg, kn)
                 except ValueError:
-                    pass
+                    continue
+                if best is None or total < best:
+                    best = total
+            if best is not None:
+                out[pname] = best
         return out

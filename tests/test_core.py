@@ -145,6 +145,57 @@ def test_viterbi_equals_argmin_without_boundaries(cfg_table):
                - p2.meta["predicted_total_s"]) < 1e-9
 
 
+def test_viterbi_fusion_matches_brute_force_with_boundary_costs(monkeypatch):
+    """Exactness of the Viterbi DP beyond the degenerate mesh=None case:
+    on a meshed 3-segment chain with non-trivial (deterministic,
+    asymmetric) boundary costs, ``fuse(boundary_costs=True)`` must equal
+    the exhaustive minimum over every combination chain."""
+    import hashlib
+    import itertools
+
+    import repro.core.fusion as F
+
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    segs = fragment(cfg)
+    assert len(segs) == 3                       # embed, g0, head
+    combos = [Combination("fsdp", frozenset(),
+                          SegmentClause(block_q=128 + 16 * i))
+              for i in range(3)]
+
+    def synth_cost(cid: str) -> float:
+        return int(hashlib.sha1(cid.encode()).hexdigest()[:6], 16) / 0xffffff
+
+    table = {s.name: [(c, CostTerms(compute_s=synth_cost(s.name + c.cid)))
+                      for c in combos] for s in segs}
+
+    def synth_boundary(cfg_, shape_, mesh_, a, sa, b, sb, hw=None):
+        # deterministic, direction-sensitive stand-in for the resharding
+        # collective a real mesh would charge
+        return synth_cost(sa.name + a.cid + sb.name + b.cid)
+
+    monkeypatch.setattr(F, "boundary_cost_s", synth_boundary)
+    mesh_sentinel = object()                    # only boundary_cost_s sees it
+    plan = F.fuse(cfg, shape, mesh_sentinel, table, boundary_costs=True)
+
+    # brute force over all 3^3 chains
+    best_total, best_chain = None, None
+    for chain in itertools.product(range(3), repeat=len(segs)):
+        total = sum(table[s.name][chain[i]][1].total_s
+                    for i, s in enumerate(segs))
+        for i in range(1, len(segs)):
+            a, sa = table[segs[i - 1].name][chain[i - 1]][0], segs[i - 1]
+            b, sb = table[segs[i].name][chain[i]][0], segs[i]
+            total += synth_boundary(cfg, shape, mesh_sentinel, a, sa, b, sb)
+        if best_total is None or total < best_total:
+            best_total, best_chain = total, chain
+
+    assert abs(plan.meta["predicted_total_s"] - best_total) < 1e-12
+    expected = {s.name: combos[best_chain[i]] for i, s in enumerate(segs)}
+    assert plan.segments == expected
+    assert plan.meta["fusion"] == "viterbi-boundary"
+
+
 def test_plan_json_roundtrip(tmp_path):
     cfg = get_arch("granite-8b").smoke()
     plan = uniform_plan(cfg, "hybrid2d", frozenset({"shard_vocab"}),

@@ -22,8 +22,11 @@ from repro.models.context import SegmentClause
 
 
 def _plan_bytes(plan):
-    """Byte-identity of the fused per-segment decisions."""
-    return json.dumps(plan.to_json()["segments"], sort_keys=True).encode()
+    """Byte-identity of the fused decisions: per-segment combinations AND
+    the chosen knob point (the joint-argmin output)."""
+    d = plan.to_json()
+    return json.dumps({"segments": d["segments"], "knobs": d["knobs"]},
+                      sort_keys=True).encode()
 
 SPACE = {"remat": ("none", "full"), "kernel": ("xla",), "block_q": (16, 32),
          "block_k": (16,), "scan_unroll": (1,), "mlstm_chunk": (16,)}
@@ -274,11 +277,11 @@ def test_unexpected_worker_exception_fails_row_not_sweep(monkeypatch):
     orig = tuner.executor.score_segment
     calls = {"n": 0}
 
-    def flaky(cfg, shape, seg, combo):
+    def flaky(cfg, shape, seg, combo, knobs=None):
         calls["n"] += 1
         if calls["n"] == 3:   # a stack group — its siblings still succeed
             raise ValueError("synthetic analysis bug")
-        return orig(cfg, shape, seg, combo)
+        return orig(cfg, shape, seg, combo, knobs=knobs)
 
     monkeypatch.setattr(tuner.executor, "score_segment", flaky)
     plan, rep = _sweep(tuner, use_cache=False)
@@ -444,22 +447,48 @@ def test_process_backend_honors_use_cache_off(tmp_path):
 
 
 def test_jobspec_joboutcome_wire_roundtrip():
-    """The process/remote wire format: pure JSON both ways."""
+    """The process/remote wire format: pure JSON both ways, including the
+    GlobalKnobs point the program is built under."""
     from repro.core.backends import JobOutcome, JobSpec
+    from repro.core.combinator import GlobalKnobs
 
     seg = Segment("g0", "stack", ("attn", "rec"), 3)
     combo = Combination("tensor_par", frozenset({"shard_vocab"}),
                         SegmentClause(remat="dots", block_q=64))
     spec = JobSpec("k1", seg, combo, segments=("g0", "g3"), bound_s=1.5,
-                   signature="sig", eff_cid="ec")
+                   signature="sig", eff_cid="ec",
+                   knobs=GlobalKnobs(microbatches=2, donate=False))
     wire = json.loads(json.dumps(spec.to_json()))
     back = JobSpec.from_json(wire)
     assert back == spec and isinstance(back.seg.pattern, tuple)
     assert isinstance(back.segments, tuple)
+    assert back.knobs == spec.knobs
+    # knobless (hand-built / pre-knob) specs stay knobless
+    bare = JobSpec("k2", seg, combo)
+    assert JobSpec.from_json(
+        json.loads(json.dumps(bare.to_json()))).knobs is None
 
     out = JobOutcome("k1", "failed", cost=None, error="deadline",
                      transient=True, attempts=2)
     assert JobOutcome.from_json(json.loads(json.dumps(out.to_json()))) == out
+
+
+def test_executor_to_spec_rejects_meshed_executor():
+    """A process worker rebuilds its executor mesh-less; serializing a
+    meshed executor must fail loudly instead of silently scoring
+    different programs under the meshed cache key (the tuner falls back
+    to the thread backend for meshed sweeps)."""
+    import numpy as np
+
+    from repro.core.backends import executor_to_spec
+    from repro.core.executor import DryRunExecutor
+
+    class FakeMesh:                     # stands in for jax Mesh devices
+        devices = np.zeros((1,))
+        axis_names = ("data",)
+
+    with pytest.raises(TypeError, match="mesh"):
+        executor_to_spec(DryRunExecutor(FakeMesh()))
 
 
 def test_arch_shape_specs_roundtrip_via_registry():
@@ -510,7 +539,7 @@ def test_transient_rows_counted_not_scored(monkeypatch):
     orig = tuner.executor.score_segment
     calls = {"n": 0}
 
-    def flaky(cfg, shape, seg, combo):
+    def flaky(cfg, shape, seg, combo, knobs=None):
         # fail two of the stack segment's four unique programs so every
         # segment keeps at least one valid row and fusion still succeeds
         if seg.kind == "stack":
@@ -520,7 +549,7 @@ def test_transient_rows_counted_not_scored(monkeypatch):
                                         transient=True)
             if calls["n"] == 2:
                 raise CombinationFailed("ShardingError: synthetic")
-        return orig(cfg, shape, seg, combo)
+        return orig(cfg, shape, seg, combo, knobs=knobs)
 
     monkeypatch.setattr(tuner.executor, "score_segment", flaky)
     _, rep = _sweep(tuner, use_cache=True)
@@ -553,6 +582,268 @@ def test_cache_tag_isolation_contract(tmp_path):
                         "ec") is not None
     assert db.cache_get("sig", "train:32x4", "local/wallclock:r5",
                         "ec") is None
+
+
+# --- the GlobalKnobs outer axis ----------------------------------------------
+
+
+def test_relevant_knob_fields():
+    from repro.core.combinator import DEFAULT_GLOBAL_SPACE
+    stack = Segment("g0", "stack", ("attn",), 2)
+    embed = Segment("embed", "embed")
+    head = Segment("head", "head")
+    for seg in (stack, embed, head):
+        # training wraps every segment in a backward pass: microbatching
+        # and donation reach all of them
+        assert seg.relevant_knob_fields("train") == \
+            frozenset({"microbatches", "donate"})
+        # inference shapes: no knob reaches any segment program
+        assert seg.relevant_knob_fields("decode") == frozenset()
+        assert seg.relevant_knob_fields("prefill") == frozenset()
+    # opt_state_dtype (the optimizer update) is never part of a segment
+    # program — sweeping it must be free on every shape
+    for kind in ("train", "decode", "prefill"):
+        assert "opt_state_dtype" not in stack.relevant_knob_fields(kind)
+    # every relevant field is a real GlobalKnobs field
+    assert stack.relevant_knob_fields("train") <= set(DEFAULT_GLOBAL_SPACE)
+
+
+def test_nonreaching_knob_sweep_adds_zero_compiles(sequential):
+    """The knob-relevance projection: sweeping a knob that reaches no
+    segment program compiles nothing new — the rows fold into the same
+    structural groups (score sharing across the knob axis)."""
+    _, rep1 = sequential
+    tuner, _, _ = _tuner(SweepDB(":memory:"), "osd")
+    plan, rep = _sweep(tuner, use_cache=False,
+                       global_space={"opt_state_dtype":
+                                     ("float32", "bfloat16")})
+    assert rep.n_knob_points == 2
+    assert rep.n_combinations == 2 * rep1.n_combinations
+    assert rep.n_scored == rep1.n_scored           # ZERO extra compiles
+    assert rep.n_done == rep.n_combinations
+    # the argmin ties across the two points; the tie-break is
+    # deterministic — the first grid point wins
+    assert plan.knobs.opt_state_dtype == "float32"
+    assert len(rep.per_knob_total_s) == 2
+    assert len(set(rep.per_knob_total_s.values())) == 1   # identical totals
+
+
+def test_nonreaching_knob_sweep_is_free_on_decode_shapes():
+    """On inference shapes NO knob reaches the program — even the
+    microbatch axis sweeps for free."""
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("decode_32k").smoke()
+    space = {"remat": ("none",), "kernel": ("xla",), "block_q": (16,),
+             "block_k": (16,), "scan_unroll": (1,), "mlstm_chunk": (16,)}
+
+    def sweep(project, **kw):
+        t = ComParTuner(cfg, shape, mesh=None, db=SweepDB(":memory:"),
+                        project=project, mode="new", executor="dryrun",
+                        timeout_s=120)
+        return t.sweep(providers=["fsdp"], clause_space=space,
+                       max_flags=0, use_cache=False, **kw)
+
+    _, rep1 = sweep("one")
+    _, rep2 = sweep("two", global_space={"microbatches": (1, 2)})
+    assert rep2.n_combinations == 2 * rep1.n_combinations
+    assert rep2.n_scored == rep1.n_scored
+
+
+def test_reaching_knob_joint_argmin_matches_brute_force(sequential):
+    """The acceptance invariant: a program-reaching knob (microbatches on
+    a train shape) changes per-segment scores, and the returned
+    ``plan.knobs`` is the joint argmin — verified against the brute-force
+    reference of one independent single-point sweep per knob point."""
+    from repro.core.combinator import GlobalKnobs
+    _, rep1 = sequential
+    tuner, _, _ = _tuner(SweepDB(":memory:"), "mb")
+    plan, rep = _sweep(tuner, use_cache=False,
+                       global_space={"microbatches": (1, 2)})
+    # microbatches reaches every train segment: every unique program
+    # compiles once per knob point
+    assert rep.n_scored == 2 * rep1.n_scored
+    totals = rep.per_knob_total_s
+    assert len(totals) == 2 and len(set(totals.values())) == 2
+
+    # brute force: one fixed-knobs sweep per point, argmin of the totals
+    ref = {}
+    for mb in (1, 2):
+        t = _tuner(SweepDB(":memory:"), f"ref{mb}")[0]
+        p, _ = _sweep(t, use_cache=False,
+                      knobs=GlobalKnobs(microbatches=mb))
+        ref[mb] = p.meta["predicted_total_s"]
+    best_mb = min(ref, key=ref.get)
+    assert plan.knobs.microbatches == best_mb
+    assert abs(plan.meta["predicted_total_s"] - ref[best_mb]) < 1e-15
+    assert plan.meta["fusion"] == "per-segment-argmin+knob-argmin"
+
+
+def test_backend_equivalence_extends_to_knob_axis(sequential):
+    """sequential/thread/process sweeps over the same global_space fuse
+    byte-identical plans — segments AND chosen knobs."""
+    space = {"microbatches": (1, 2),
+             "opt_state_dtype": ("float32", "bfloat16")}
+    plans = {}
+    for backend, workers in (("sequential", 1), ("thread", 2),
+                             ("process", 2)):
+        t, _, _ = _tuner(SweepDB(":memory:"), f"kbe-{backend}")
+        plan, rep = _sweep(t, backend=backend, workers=workers,
+                           use_cache=False, global_space=space)
+        plans[backend] = (plan, rep)
+        t.close()
+    ref_bytes = _plan_bytes(plans["sequential"][0])
+    ref_rep = plans["sequential"][1]
+    for backend, (plan, rep) in plans.items():
+        assert _plan_bytes(plan) == ref_bytes, backend
+        assert (rep.n_done, rep.n_failed, rep.n_scored) == \
+            (ref_rep.n_done, 0, ref_rep.n_scored), backend
+
+
+def test_effective_cid_v2_never_aliases_v1_cache_rows():
+    """Pre-knob score_cache rows must never be served to the knob-aware
+    engine: the v2 effective cid hashes a versioned blob that includes
+    the knob projection, so it differs from the v1 hash even for the
+    same mapping + clause content."""
+    import hashlib
+
+    from repro.core.combinator import GlobalKnobs, effective_cid
+
+    combo = Combination("fsdp", frozenset(), SegmentClause())
+    relevant = frozenset({"remat", "kernel"})
+
+    def v1_hash(map_key):
+        cl = {f: getattr(combo.clause, f) for f in sorted(relevant)}
+        blob = json.dumps({"map": map_key, "clause": cl},
+                          sort_keys=True, default=str)
+        return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+    # the pre-refactor key component never equals the new one
+    assert effective_cid(combo, relevant, "local") != v1_hash("local")
+    assert effective_cid(combo, relevant, "local",
+                         GlobalKnobs(), frozenset()) != v1_hash("local")
+    # knob projection: irrelevant knob fields collapse, relevant split
+    k1, k2 = GlobalKnobs(microbatches=1), GlobalKnobs(microbatches=2)
+    rel = frozenset({"microbatches"})
+    assert effective_cid(combo, relevant, "local", k1, rel) != \
+        effective_cid(combo, relevant, "local", k2, rel)
+    assert effective_cid(combo, relevant, "local", k1, frozenset()) == \
+        effective_cid(combo, relevant, "local", k2, frozenset())
+    # same projection -> same cid: points differing only in fields
+    # outside the relevant set collapse
+    osd = GlobalKnobs(opt_state_dtype="bfloat16")
+    assert effective_cid(combo, relevant, "local", osd, rel) == \
+        effective_cid(combo, relevant, "local", k1, rel)
+
+
+def test_knob_rows_and_default_rows_share_cache_when_projection_agrees(
+        tmp_path):
+    """Cross-sweep score sharing over the knob axis: a warm cache written
+    by a default single-point sweep serves a global_space sweep's rows
+    whose knob projection matches (mb=1), so only the mb=2 programs
+    compile."""
+    db = SweepDB(str(tmp_path / "sweep.db"))
+    t1, _, _ = _tuner(db, "warm")
+    _, rep1 = _sweep(t1, use_cache=True)
+    assert rep1.n_scored > 0
+    t2, _, _ = _tuner(db, "knobbed")
+    _, rep2 = _sweep(t2, use_cache=True,
+                     global_space={"microbatches": (1, 2)})
+    # mb=1 rows: all cache hits; mb=2 rows: compiled fresh
+    assert rep2.n_cached == rep1.n_combinations
+    assert rep2.n_scored == rep1.n_scored
+
+
+def test_paper_count_charges_only_swept_knob_fields():
+    from repro.core.combinator import swept_knob_fields
+    assert swept_knob_fields(None) == ()
+    assert swept_knob_fields({"microbatches": (1,)}) == ()
+    assert swept_knob_fields({"microbatches": (1, 2),
+                              "donate": (True,),
+                              "opt_state_dtype": ("float32", "bfloat16")}) \
+        == ("microbatches", "opt_state_dtype")
+
+    # a fixed-knobs sweep charges rtl=0; sweeping one knob field doubles
+    # the (2^{rtl+d}-1) factor (+1 in the exponent)
+    t1, _, _ = _tuner(SweepDB(":memory:"), "pc1")
+    _, rep1 = _sweep(t1, use_cache=False)
+    t2, _, _ = _tuner(SweepDB(":memory:"), "pc2")
+    _, rep2 = _sweep(t2, use_cache=False,
+                     global_space={"opt_state_dtype":
+                                   ("float32", "bfloat16")})
+    assert rep1.paper_count < rep2.paper_count
+    assert "realized=" in rep1.summary()
+    assert "paper_formula_upper_bound=" in rep1.summary()
+
+
+def test_process_backend_pool_survives_across_runs():
+    """The worker-reuse satellite: successive run() calls on one process
+    backend reuse the same warm workers instead of paying a fresh jax
+    import per call (what keeps an outer knob axis cheap)."""
+    from repro.core.backends import JobSpec, ProcessBackend
+    from repro.core.executor import SleepExecutor
+
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    seg = next(s for s in fragment(cfg) if s.kind == "stack")
+    combo = Combination("fsdp", frozenset(), SegmentClause())
+
+    backend = ProcessBackend(SleepExecutor(sleep_s=0.01), cfg, shape,
+                             workers=1, timeout_s=60)
+    try:
+        backend.warmup()
+        pids0 = sorted(w.proc.pid for w in backend._pool)
+        out1 = list(backend.run(
+            [JobSpec("j1", seg, combo, segments=(seg.name,))]))
+        assert [o.status for o in out1] == ["done"]
+        assert sorted(w.proc.pid for w in backend._pool) == pids0
+        out2 = list(backend.run(
+            [JobSpec("j2", seg, combo, segments=(seg.name,))]))
+        assert [o.status for o in out2] == ["done"]
+        assert sorted(w.proc.pid for w in backend._pool) == pids0
+        assert all(w.proc.is_alive() for w in backend._pool)
+    finally:
+        backend.close()
+    assert backend._pool == []
+
+
+def test_tuner_reuses_process_engine_across_sweeps():
+    """Tuner-level worker reuse: two sweeps on one tuner share one cached
+    process backend (same warm pool), released by tuner.close()."""
+    db = SweepDB(":memory:")
+    tuner, _, _ = _tuner(db, "reuse")
+    space2 = dict(SPACE, block_q=(64,))
+    try:
+        _sweep(tuner, backend="process", workers=1, use_cache=False)
+        assert len(tuner._engines) == 1
+        engine = next(iter(tuner._engines.values()))
+        pids = sorted(w.proc.pid for w in engine._pool)
+        assert pids, "pool should stay warm after the first sweep"
+        # a second sweep with new rows reuses the same engine + workers
+        tuner.sweep(providers=["tensor_par", "fsdp"], clause_space=space2,
+                    max_flags=1, backend="process", workers=1,
+                    use_cache=False)
+        assert len(tuner._engines) == 1
+        assert next(iter(tuner._engines.values())) is engine
+        assert sorted(w.proc.pid for w in engine._pool) == pids
+    finally:
+        tuner.close()
+    assert tuner._engines == {}
+
+
+def test_incumbents_are_scoped_per_knob_point():
+    """Pruning with a swept knob axis must compare against the SAME knob
+    point's incumbents: a cheap mb=1 score must never prune an mb=2 row
+    (each point needs its own per-segment argmin for the joint solve).
+    Plan equality with the unpruned sweep is the observable contract."""
+    t1, _, _ = _tuner(SweepDB(":memory:"), "np")
+    plan_ref, rep_ref = _sweep(t1, use_cache=False, prune=False,
+                               global_space={"microbatches": (1, 2)})
+    t2, _, _ = _tuner(SweepDB(":memory:"), "pp")
+    plan_pr, rep_pr = _sweep(t2, use_cache=False, prune=True,
+                             prune_margin=0.0,
+                             global_space={"microbatches": (1, 2)})
+    assert _plan_bytes(plan_pr) == _plan_bytes(plan_ref)
+    assert rep_pr.per_knob_total_s == rep_ref.per_knob_total_s
 
 
 def test_build_contexts_records_substitution(caplog):
