@@ -13,6 +13,14 @@ added: the same cold engine on the spawned-worker process backend (true
 parallel tracing past the GIL + hard preemptive timeouts) — thread rows
 are always reported alongside, so backend numbers stay comparable.
 
+With ``--backend remote`` (or ``both``) a loopback sweep scoring server
+is started (``repro.core.backends.server``) and two rows are added:
+``engine-cold-remote`` (fresh server cache — every unique program
+compiles once, server-side) and ``engine-warm-remote`` (a *different*
+client with an empty local DB against the now-warm server).  The warm
+run asserts ZERO server-side compiles — the cross-host amortization
+story, measured.
+
 With ``--globals`` an ``engine-cold-knobaxis2x`` row sweeps a 2-point
 *non-reaching* GlobalKnobs axis (``opt_state_dtype``): twice the rows,
 and the run asserts the engine compiled nothing extra — the knob-
@@ -23,7 +31,8 @@ optimization, not an approximation) and reports speedups vs seed-style.
 
   PYTHONPATH=src python benchmarks/sweep_throughput.py [--quick]
       [--arch granite-8b] [--shape train_4k] [--workers N]
-      [--backend thread|process|both] [--assert-speedup X] [--globals]
+      [--backend thread|process|remote|both] [--assert-speedup X]
+      [--globals]
 """
 from __future__ import annotations
 
@@ -107,6 +116,48 @@ def run(quick: bool = False, arch: str = "granite-8b",
                 "process backend changed the plan!"
             rows.append(("engine-cold-process", t_proc, rep3))
 
+        if backend in ("remote", "both"):
+            import json
+            import urllib.request
+
+            from repro.core.backends.server import SweepScoringServer
+
+            def stats(url):
+                with urllib.request.urlopen(url + "/v1/stats",
+                                            timeout=10) as r:
+                    return json.loads(r.read())
+
+            srv = SweepScoringServer(os.path.join(tmp, "remote-server.db"),
+                                     workers=workers)
+            url = srv.start()
+            try:
+                # clients keep their local cache OFF so every score comes
+                # over the wire — the rows measure the server's cache
+                plan5, rep5, t_rcold = _sweep(
+                    SweepDB(os.path.join(tmp, "rem1.db")), "rem-cold", cfg,
+                    shape, space, backend="remote", remote_url=url,
+                    use_cache=False, prune=True)
+                assert plan5.segments == plan0.segments, \
+                    "remote backend changed the plan!"
+                s_cold = stats(url)
+                assert s_cold["n_compiled"] == rep5.n_scored > 0
+                plan6, rep6, t_rwarm = _sweep(
+                    SweepDB(os.path.join(tmp, "rem2.db")), "rem-warm", cfg,
+                    shape, space, backend="remote", remote_url=url,
+                    use_cache=False, prune=True)
+                assert plan6.segments == plan0.segments, \
+                    "warm remote sweep changed the plan!"
+                s_warm = stats(url)
+                assert s_warm["n_compiled"] == s_cold["n_compiled"], \
+                    (f"cache-warm remote sweep compiled server-side: "
+                     f"{s_warm['n_compiled']} vs {s_cold['n_compiled']}")
+                assert rep6.n_scored == 0, \
+                    "warm remote sweep recompiled something"
+                rows.append(("engine-cold-remote", t_rcold, rep5))
+                rows.append(("engine-warm-remote", t_rwarm, rep6))
+            finally:
+                srv.close()
+
         if globals_axis:
             # the knob axis: 2x the rows (a swept non-reaching knob),
             # same number of compiles — the axis must be ~free
@@ -142,7 +193,7 @@ def main():
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--workers", type=int, default=0)
     ap.add_argument("--backend", default="thread",
-                    choices=("thread", "process", "both"))
+                    choices=("thread", "process", "remote", "both"))
     ap.add_argument("--assert-speedup", type=float, default=0.0)
     ap.add_argument("--globals", dest="globals_axis", action="store_true",
                     help="add a 2-point non-reaching GlobalKnobs axis row "

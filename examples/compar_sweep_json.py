@@ -6,7 +6,14 @@ The ``"globals"`` field is the paper's RTL-routine axis: a GlobalKnobs
 grid swept as an outer dimension of the same sweep, with the fused
 plan's knobs chosen by the joint argmin (see docs/sweep_engine.md).
 
+With ``--remote-url`` the scoring leaves this host entirely: jobs are
+shipped to a sweep scoring server
+(``python -m repro.core.backends.server --db scores.db``) and resolved
+against ITS score cache first — any host that ever scored the same
+programs against that server makes this sweep free.
+
     PYTHONPATH=src python examples/compar_sweep_json.py [--backend B]
+        [--remote-url http://host:8477]
 """
 import argparse
 import json
@@ -29,7 +36,7 @@ SWEEP_SPEC = {
 }
 
 
-def main(backend: str = "thread"):
+def main(backend: str = "thread", remote_url: str = None):
     spec_path = os.path.join(tempfile.gettempdir(), "sweep_spec.json")
     with open(spec_path, "w") as f:
         json.dump(SWEEP_SPEC, f, indent=2)
@@ -45,6 +52,8 @@ def main(backend: str = "thread"):
     db = SweepDB(db_path)
 
     workers = 1 if backend == "sequential" else (os.cpu_count() or 1)
+    if remote_url:
+        print(f"scoring remotely against {remote_url}")
     # first run: New mode, with the sweep-engine knobs on (parallel
     # scoring + exact lower-bound pruning; see docs/sweep_engine.md) and
     # the JSON spec's "globals" grid as the outer knob axis
@@ -52,7 +61,8 @@ def main(backend: str = "thread"):
                         mode="new", executor="dryrun")
     plan, rep = tuner.sweep(providers=providers, clause_space=clause_space,
                             global_space=global_space, max_flags=1,
-                            backend=backend, workers=workers, prune=True)
+                            backend=backend, workers=workers, prune=True,
+                            remote_url=remote_url)
     print("first run:", rep.summary())
     assert rep.n_knob_points == 2
     print("per-knob fused totals:", rep.per_knob_total_s)
@@ -65,7 +75,8 @@ def main(backend: str = "thread"):
     plan2, rep2 = tuner2.sweep(providers=providers,
                                clause_space=clause_space,
                                global_space=global_space,
-                               max_flags=1, backend=backend)
+                               max_flags=1, backend=backend,
+                               remote_url=remote_url)
     print("continue run:", rep2.summary())
     assert rep2.elapsed_s < rep.elapsed_s
     assert plan2.knobs == plan.knobs       # the joint argmin is stable
@@ -76,5 +87,9 @@ def main(backend: str = "thread"):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", default="thread",
-                    choices=("thread", "sequential", "process"))
+                    choices=("thread", "sequential", "process", "remote"))
+    ap.add_argument("--remote-url", dest="remote_url", default=None,
+                    help="sweep scoring server URL (python -m "
+                         "repro.core.backends.server); implies "
+                         "--backend remote")
     main(**vars(ap.parse_args()))

@@ -3,25 +3,28 @@
 ``make_backend`` is the selection point for ``ComParTuner.sweep(
 backend=...)``: ``"thread"`` (default, PR-1 semantics), ``"sequential"``
 (thread with one worker, no pool), ``"process"`` (spawned workers, hard
-preemptive timeouts).
+preemptive timeouts), ``"remote"`` (ship jobs to a sweep scoring server
+— ``backends/server.py`` — over HTTP; needs ``remote_url``).
 """
 from repro.core.backends.base import (  # noqa: F401
-    DONE, FAILED, PRUNED, STATUSES, IncumbentTracker, JobGroup, JobOutcome,
-    JobSpec, ScoringBackend, executor_from_spec, executor_to_spec,
+    DONE, FAILED, PRUNED, STATUSES, WIRE_VERSION, IncumbentTracker, JobGroup,
+    JobOutcome, JobSpec, ScoringBackend, WireVersionError, check_wire_version,
+    executor_from_spec, executor_to_spec,
 )
 from repro.core.backends.process import ProcessBackend  # noqa: F401
 from repro.core.backends.recorder import Recorder  # noqa: F401
+from repro.core.backends.remote import RemoteBackend  # noqa: F401
 from repro.core.backends.scheduler import (  # noqa: F401
     Scheduler, SweepWork, env_key, mesh_key, shape_key,
 )
 from repro.core.backends.thread import ThreadBackend  # noqa: F401
 
-BACKENDS = ("thread", "sequential", "process")
+BACKENDS = ("thread", "sequential", "process", "remote")
 
 
 def make_backend(name, executor, cfg, shape, *, workers=1, prune=False,
                  prune_margin=0.1, timeout_s=None, db_path=None,
-                 shape_key="", mesh_key=""):
+                 shape_key="", mesh_key="", remote_url=None):
     if name in (None, "thread"):
         return ThreadBackend(executor, cfg, shape, workers=workers,
                              prune=prune, prune_margin=prune_margin)
@@ -33,4 +36,13 @@ def make_backend(name, executor, cfg, shape, *, workers=1, prune=False,
                               prune=prune, prune_margin=prune_margin,
                               timeout_s=timeout_s, db_path=db_path,
                               shape_key=shape_key, mesh_key=mesh_key)
+    if name == "remote":
+        if not remote_url:
+            raise ValueError("backend='remote' needs remote_url "
+                             "(the sweep scoring server, e.g. "
+                             "http://host:8477)")
+        return RemoteBackend(executor, cfg, shape, url=remote_url,
+                             prune=prune, prune_margin=prune_margin,
+                             timeout_s=timeout_s, shape_key=shape_key,
+                             mesh_key=mesh_key)
     raise ValueError(f"unknown backend {name!r}; have {BACKENDS}")

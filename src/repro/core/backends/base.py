@@ -26,6 +26,28 @@ from typing import Dict, Iterator, Optional, Sequence, Tuple
 from repro.core.combinator import Combination, GlobalKnobs
 from repro.core.segment import Segment
 
+#: version of the JSON wire format: JobSpec/JobOutcome payloads, the
+#: process-worker init message, and the remote scoring service's HTTP
+#: envelope all carry it.  Bump on any incompatible change — a server
+#: must reject (not guess at) payloads from a different format era,
+#: because a misdecoded spec would be scored and *cached* under the
+#: wrong key on every host sharing that server.
+WIRE_VERSION = 1
+
+
+class WireVersionError(ValueError):
+    """A wire payload was produced by an incompatible format version."""
+
+
+def check_wire_version(payload: Dict):
+    """Validate an envelope's ``v`` field against :data:`WIRE_VERSION`."""
+    v = payload.get("v")
+    if v != WIRE_VERSION:
+        raise WireVersionError(
+            f"wire format version mismatch: payload has v={v!r}, "
+            f"this end speaks v={WIRE_VERSION}")
+
+
 #: structured outcome taxonomy (replaces string-matched statuses)
 DONE = "done"          # compiled + analyzed; cost attached
 FAILED = "failed"      # could not be scored; ``transient`` says whether

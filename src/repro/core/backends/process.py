@@ -35,7 +35,7 @@ import multiprocessing as mp
 import multiprocessing.connection
 import time
 from collections import deque
-from typing import Dict, Iterator, List, Optional, Sequence
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
 
 from repro.core.backends.base import (FAILED, PRUNED, DONE, IncumbentTracker,
                                       JobOutcome, JobSpec, ScoringBackend,
@@ -142,6 +142,9 @@ class ProcessBackend(ScoringBackend):
         self._pool: List[_Worker] = []
         self._next_wid = 0
         self._deaths = 0            # workers lost (crash or kill)
+        #: (job key, worker id) per successful dispatch of the last run —
+        #: the observable record of the requeue-diversification policy
+        self.dispatch_log: List[Tuple[str, int]] = []
         self._init = {
             "executor": executor_to_spec(executor),
             "arch": arch_to_spec(cfg),
@@ -226,12 +229,16 @@ class ProcessBackend(ScoringBackend):
             outcomes.append(out)
         return outcomes
 
-    def _lose(self, w: _Worker, reason: str, queue, attempts
+    def _lose(self, w: _Worker, reason: str, queue, attempts, excluded
               ) -> Optional[JobOutcome]:
         """A busy worker died or was killed: requeue its job once, fail
-        it as transient on the second loss."""
+        it as transient on the second loss.  The lost worker's id joins
+        the job's excluded set so the retry is never dispatched back to
+        it (or to whatever inherits its id) — the retry must diversify,
+        not burn itself on the same slot that just died."""
         job = w.job
         self._kill(w)
+        excluded.setdefault(job.key, set()).add(w.wid)
         attempts[job.key] = attempts.get(job.key, 0) + 1
         if attempts[job.key] >= self.max_attempts:
             log.warning("job %s lost twice (%s): transient failure",
@@ -242,6 +249,47 @@ class ProcessBackend(ScoringBackend):
         log.warning("job %s lost (%s): requeued", job.key, reason)
         queue.appendleft(job)
         return None
+
+    def _next_job(self, w: _Worker, queue, excluded: Dict[str, Set[int]],
+                  attempts: Dict[str, int]
+                  ) -> Tuple[Optional[JobSpec], List[JobOutcome]]:
+        """Pop the first job dispatchable to ``w``: pruned jobs are
+        settled on the spot (returned for yielding), jobs excluded on
+        ``w`` — they already died in its hands once — stay queued for a
+        different worker."""
+        pruned: List[JobOutcome] = []
+        skipped: List[JobSpec] = []
+        job = None
+        while queue:
+            j = queue.popleft()
+            if self.tracker.pruned(j):
+                pruned.append(JobOutcome(
+                    j.key, PRUNED,
+                    error=f"lower bound {j.bound_s:.3e}s > incumbent best",
+                    attempts=attempts.get(j.key, 0) + 1))
+                continue
+            if w.wid in excluded.get(j.key, ()):
+                skipped.append(j)
+                continue
+            job = j
+            break
+        for j in reversed(skipped):
+            queue.appendleft(j)
+        return job, pruned
+
+    def _dispatch(self, w: _Worker, job: JobSpec, queue) -> bool:
+        """Send ``job`` to ``w``; on a dead pipe the job goes back to the
+        queue attempt-free (it never started) and the worker is culled."""
+        try:
+            w.conn.send(job.to_json())
+        except (OSError, ValueError):
+            queue.appendleft(job)
+            self._kill(w)
+            return False
+        w.job = job
+        w.started = time.monotonic()
+        self.dispatch_log.append((job.key, w.wid))
+        return True
 
     # ------------------------------------------------------------------
     def run(self, jobs: Sequence[JobSpec],
@@ -257,11 +305,19 @@ class ProcessBackend(ScoringBackend):
         seeded only from its own ``incumbents``, so a previous sweep's
         bests can never prune this one's rows.
         """
+        # engine-reuse hygiene: a previous run that ended in an error or
+        # an abandoned generator can leave dead workers in the pool —
+        # cull them before they can swallow this run's dispatches
+        for w in list(self._pool):
+            if not w.proc.is_alive():
+                self._kill(w)
         self.tracker = IncumbentTracker(self.prune, self.prune_margin)
         self.tracker.seed(incumbents)
         self._deaths = 0
+        self.dispatch_log = []
         queue = deque(jobs)
         attempts: Dict[str, int] = {}
+        excluded: Dict[str, Set[int]] = {}
         death_budget = 2 * self.workers + 2 * len(queue) + 4
         try:
             while queue or any(w.job is not None for w in self._pool):
@@ -271,32 +327,35 @@ class ProcessBackend(ScoringBackend):
                 while len(self._pool) < need:
                     self._spawn()
 
-                # dispatch to ready idle workers (pruning at dispatch
-                # time, same as the thread runner's job-start check)
-                for w in list(self._pool):
-                    if w.job is not None or not w.ready:
+                # dispatch to ready idle workers, oldest-spawned first
+                # (pruning at dispatch time, same as the thread runner's
+                # job-start check).  A requeued job skips workers in its
+                # excluded set — the retry prefers a proven survivor
+                # over the worker (or slot) it just died on.
+                idle = [w for w in self._pool if w.job is None and w.ready]
+                idle.sort(key=lambda w: (w.spawned, w.wid))
+                dispatched = False
+                for w in idle:
+                    job, pruned_outs = self._next_job(w, queue, excluded,
+                                                      attempts)
+                    for out in pruned_outs:
+                        yield out
+                    if job is None:
                         continue
-                    while queue:
-                        job = queue.popleft()
-                        if self.tracker.pruned(job):
-                            yield JobOutcome(
-                                job.key, PRUNED,
-                                error=f"lower bound {job.bound_s:.3e}s > "
-                                      "incumbent best",
-                                attempts=attempts.get(job.key, 0) + 1)
-                            continue
-                        try:
-                            w.conn.send(job.to_json())
-                        except (OSError, ValueError):
-                            # worker died while idle: the job never
-                            # started, so it costs no attempt — put it
-                            # back and cull the worker
-                            queue.appendleft(job)
-                            self._kill(w)
-                            break
-                        w.job = job
-                        w.started = time.monotonic()
-                        break
+                    if self._dispatch(w, job, queue):
+                        dispatched = True
+                if (queue and not dispatched
+                        and not any(w.job is not None for w in self._pool)
+                        and any(w.job is None and w.ready and w in self._pool
+                                for w in idle)):
+                    # every idle worker is excluded for every queued job
+                    # and nothing is in flight.  Under the kill-on-loss
+                    # policy excluded ids are always dead, so this can't
+                    # trigger — but exclusion must degrade to a dispatch,
+                    # never to a stalled sweep.
+                    w = next(w for w in idle
+                             if w.job is None and w.ready and w in self._pool)
+                    self._dispatch(w, queue.popleft(), queue)
 
                 for out in self._drain_messages():
                     out.attempts = attempts.get(out.key, 0) + 1
@@ -321,13 +380,15 @@ class ProcessBackend(ScoringBackend):
                     if kill_after and now - w.started > kill_after:
                         out = self._lose(
                             w, f"hard deadline {self.timeout_s}s exceeded "
-                               f"(worker {w.wid} killed)", queue, attempts)
+                               f"(worker {w.wid} killed)", queue, attempts,
+                            excluded)
                         if out is not None:
                             yield out
                     elif not w.proc.is_alive():
                         out = self._lose(
                             w, f"worker {w.wid} crashed "
-                               f"(exit {w.proc.exitcode})", queue, attempts)
+                               f"(exit {w.proc.exitcode})", queue, attempts,
+                            excluded)
                         if out is not None:
                             yield out
                 if self._deaths > death_budget:

@@ -40,6 +40,7 @@ CREATE TABLE IF NOT EXISTS score_cache (
     cost TEXT,
     error TEXT,
     created REAL,
+    total_s REAL,                    -- denormalized cost for keep-best upserts
     PRIMARY KEY (signature, shape, mesh, cid)
 );
 """
@@ -58,6 +59,31 @@ class SweepDB:
         self.conn.execute("PRAGMA journal_mode=WAL")
         self.conn.execute("PRAGMA synchronous=NORMAL")
         self.conn.executescript(_SCHEMA)
+        if "total_s" not in {r[1] for r in self.conn.execute(
+                "PRAGMA table_info(score_cache)")}:
+            # pre-PR-4 DBs: the keep-best upsert compares costs in SQL,
+            # so the total must live in its own column — backfill it from
+            # the stored cost blobs (a NULL total would otherwise leave
+            # legacy rows beatable only by status rank)
+            try:
+                self.conn.execute(
+                    "ALTER TABLE score_cache ADD COLUMN total_s REAL")
+            except sqlite3.OperationalError:
+                # lost the migration race to another process opening the
+                # same file; the column exists now — backfill is
+                # idempotent, so run it regardless
+                pass
+            backfill = []
+            for rowid, cost in self.conn.execute(
+                    "SELECT rowid, cost FROM score_cache WHERE cost != ''"):
+                try:
+                    total = json.loads(cost).get("total_s")
+                except (ValueError, AttributeError):
+                    continue
+                if total is not None:
+                    backfill.append((total, rowid))
+            self.conn.executemany(
+                "UPDATE score_cache SET total_s=? WHERE rowid=?", backfill)
         self.conn.commit()
 
     # --- project modes -----------------------------------------------------
@@ -191,15 +217,46 @@ class SweepDB:
                 "cost": json.loads(row[1]) if row[1] else None,
                 "error": row[2]}
 
+    #: keep-best ranking of cache statuses (higher wins a conflict)
+    _STATUS_RANK = "CASE %s WHEN 'done' THEN 2 WHEN 'failed' THEN 1 ELSE 0 END"
+
     def cache_put_many(self, entries: Iterable[Dict]):
         """entries: {"signature","shape","mesh","cid","status","cost"?,
-        "error"?} — one transaction."""
+        "error"?} — one transaction, insert-if-absent / keep-best.
+
+        A conflicting row is replaced only when the incoming entry is
+        strictly better: ``done`` beats ``failed``, and among two ``done``
+        entries the lower ``total_s`` wins.  Ties keep the existing row
+        (first-writer-wins), so a stale in-flight batch — another thread,
+        another sweep process, or a remote scoring server's client — can
+        never clobber a fresher equal-or-better score.  The comparison
+        runs inside the upsert statement itself, so it is atomic even
+        across processes sharing the DB file.
+        """
         now = time.time()
+        rows = []
+        for e in entries:
+            cost = e.get("cost") or {}
+            rows.append((e["signature"], e["shape"], e["mesh"], e["cid"],
+                         e["status"], json.dumps(cost), e.get("error", ""),
+                         now, cost.get("total_s")))
         self.conn.executemany(
-            "INSERT OR REPLACE INTO score_cache VALUES (?,?,?,?,?,?,?,?)",
-            [(e["signature"], e["shape"], e["mesh"], e["cid"], e["status"],
-              json.dumps(e.get("cost") or {}), e.get("error", ""), now)
-             for e in entries])
+            "INSERT INTO score_cache "
+            "(signature, shape, mesh, cid, status, cost, error, created, "
+            " total_s) VALUES (?,?,?,?,?,?,?,?,?) "
+            "ON CONFLICT(signature, shape, mesh, cid) DO UPDATE SET "
+            "status=excluded.status, cost=excluded.cost, "
+            "error=excluded.error, created=excluded.created, "
+            "total_s=excluded.total_s "
+            "WHERE (%s) < (%s) OR (score_cache.status='done' "
+            "AND excluded.status='done' "
+            # COALESCE: a legacy 'done' row whose backfill found no total
+            # (cost blob without total_s) must stay beatable, not become
+            # a NULL-compares-false fixed point
+            "AND excluded.total_s < COALESCE(score_cache.total_s, 1e999))"
+            % (self._STATUS_RANK % "score_cache.status",
+               self._STATUS_RANK % "excluded.status"),
+            rows)
         self.conn.commit()
 
     def cache_size(self) -> int:

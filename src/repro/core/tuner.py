@@ -15,8 +15,11 @@ The sweep execution core is the three-stage pipeline of
   unique programs cheapest-lower-bound-first.
 * **ScoringBackend** — scores unique programs: ``thread`` (PR-1
   semantics; soft off-main-thread deadline), ``sequential`` (one worker,
-  no pool), or ``process`` (spawned workers; true parallel tracing past
-  the GIL and a *hard* kill-based timeout with requeue-once-then-fail).
+  no pool), ``process`` (spawned workers; true parallel tracing past
+  the GIL and a *hard* kill-based timeout with requeue-once-then-fail),
+  or ``remote`` (ship jobs to a sweep scoring server —
+  ``sweep(remote_url=...)`` — which resolves them against ITS shared
+  score cache first: cross-host amortization).
 * **Recorder** — fans outcomes back out to member rows, keeps the
   report accounting, applies the cache policy (transient outcomes are
   never cached), and writes batched transactions.
@@ -112,6 +115,7 @@ class ComParTuner:
               max_flags: Optional[int] = None,
               backend: str = "thread",
               workers: int = 1,
+              remote_url: Optional[str] = None,
               prune: bool = False, prune_margin: float = 0.1,
               use_cache: bool = True, share_scores: bool = True,
               record_batch: int = 64) -> Tuple[Plan, SweepReport]:
@@ -127,9 +131,14 @@ class ComParTuner:
                           otherwise ignored).  The grid is not
                           ``budget``-sampled.
         ``backend``       scoring backend: ``thread`` (default) |
-                          ``sequential`` | ``process``
+                          ``sequential`` | ``process`` | ``remote``
         ``workers``       workers scoring unique programs (threads or
-                          spawned processes, per ``backend``)
+                          spawned processes, per ``backend``; the remote
+                          backend's workers live server-side)
+        ``remote_url``    sweep scoring server URL (``backends/server.py``);
+                          implies ``backend="remote"``.  Jobs are shipped
+                          as JSON and resolved against the *server's*
+                          score cache first — cross-host score sharing.
         ``prune``         exact lower-bound pruning on/off
         ``prune_margin``  relative headroom the bound must clear
         ``use_cache``     persistent structural score cache on/off
@@ -148,12 +157,18 @@ class ComParTuner:
             log.warning("prune disabled: exactness doesn't extend to "
                         "boundary-cost (Viterbi) fusion")
             prune = False
-        if backend == "process" and self.mesh is not None:
+        if remote_url is not None:
+            backend = "remote"
+        if backend == "remote" and not remote_url:
+            raise ValueError("backend='remote' needs remote_url "
+                             "(the sweep scoring server URL)")
+        if backend in ("process", "remote") and self.mesh is not None:
             # the wire format reconstructs arch/shape in the worker;
             # meshes (device handles) don't serialize
-            log.warning("process backend needs a serializable job spec; "
-                        "meshed sweeps fall back to the thread backend")
-            backend = "thread"
+            log.warning("%s backend needs a serializable job spec; "
+                        "meshed sweeps fall back to the thread backend",
+                        backend)
+            backend, remote_url = "thread", None
         if workers > 1 and not getattr(self.executor, "parallel_safe", True):
             log.warning("workers=%d -> 1: %s timings would contend on the "
                         "device", workers, type(self.executor).__name__)
@@ -194,7 +209,8 @@ class ComParTuner:
         self.db.register_many(self.project, reg)
 
         self._execute(segs, per_seg_combos, points, rep,
-                      backend=backend, workers=workers, prune=prune,
+                      backend=backend, workers=workers,
+                      remote_url=remote_url, prune=prune,
                       prune_margin=prune_margin, use_cache=use_cache,
                       share_scores=share_scores, record_batch=record_batch)
 
@@ -231,7 +247,8 @@ class ComParTuner:
                  per_seg_combos: Dict[str, List[Combination]],
                  knob_points: Sequence[GlobalKnobs],
                  rep: SweepReport, *, backend: str, workers: int,
-                 prune: bool, prune_margin: float, use_cache: bool,
+                 remote_url: Optional[str], prune: bool,
+                 prune_margin: float, use_cache: bool,
                  share_scores: bool, record_batch: int):
         """Score everything not already settled (Continue mode):
         Scheduler -> ScoringBackend -> Recorder."""
@@ -251,19 +268,25 @@ class ComParTuner:
                                knob_points=knob_points)
 
         engine, transient_engine = self._engine(
-            backend, workers=workers, prune=prune,
+            backend, workers=workers, remote_url=remote_url, prune=prune,
             prune_margin=prune_margin, use_cache=use_cache,
             shape_key=sk, mesh_key=mk)
         try:
             for out in engine.run(work.jobs, incumbents=work.incumbents):
                 recorder.outcome(work.groups[out.key], out)
         finally:
-            if transient_engine:
-                engine.close()
-            recorder.flush()
+            # flush BEFORE closing: results already scored must land in
+            # the DB even if the engine's teardown throws — and a failing
+            # close must never eat the recorder flush (or vice versa)
+            try:
+                recorder.flush()
+            finally:
+                if transient_engine:
+                    engine.close()
 
     # ------------------------------------------------------------------
-    def _engine(self, backend: str, *, workers: int, prune: bool,
+    def _engine(self, backend: str, *, workers: int,
+                remote_url: Optional[str], prune: bool,
                 prune_margin: float, use_cache: bool,
                 shape_key: str, mesh_key: str):
         """Build a ScoringBackend; cache process backends for warm-worker
@@ -272,16 +295,19 @@ class ComParTuner:
         A process pool pays ~seconds of jax import per spawned worker, so
         it is kept alive across ``sweep()`` calls on one tuner (same
         engine parameters) and only torn down by :meth:`close`.  Thread/
-        sequential backends hold no resources and are built per sweep.
+        sequential/remote backends hold no local resources (the remote
+        backend's warm pool lives server-side) and are built per sweep.
         Returns ``(engine, transient)``; transient engines are closed by
-        the caller after the run."""
+        the caller after the run.  A cached engine that survived an
+        aborted sweep culls its dead workers on reuse (see
+        ``ProcessBackend.run``)."""
         kw = dict(
             workers=workers, prune=prune, prune_margin=prune_margin,
             timeout_s=getattr(self.executor, "timeout_s", None),
             # workers get a read-only cache view only when the cache is
             # on — use_cache=False must force real recompiles everywhere
             db_path=self.db.path if use_cache else None,
-            shape_key=shape_key, mesh_key=mesh_key)
+            shape_key=shape_key, mesh_key=mesh_key, remote_url=remote_url)
         if backend != "process":
             return make_backend(backend, self.executor, self.cfg,
                                 self.shape, **kw), True
@@ -295,10 +321,20 @@ class ComParTuner:
 
     def close(self):
         """Release cached scoring backends (warm process-worker pools).
-        Idempotent; also runs on GC and via the context-manager exit."""
+        Idempotent and exception-safe: one backend's failing teardown
+        never leaks the others' worker pools.  Also runs on GC and via
+        the context-manager exit."""
         engines, self._engines = self._engines, {}
+        first_err = None
         for engine in engines.values():
-            engine.close()
+            try:
+                engine.close()
+            except Exception as e:           # keep releasing the rest
+                log.warning("engine close failed: %s", e)
+                if first_err is None:
+                    first_err = e
+        if first_err is not None:
+            raise first_err
 
     def __enter__(self) -> "ComParTuner":
         return self

@@ -1,0 +1,355 @@
+"""The remote scoring backend + sweep scoring server (sweep-as-a-service).
+
+Acceptance invariants: sequential, thread, process and remote (loopback
+server) backends fuse byte-identical plans on the same sweep; a second
+remote sweep against a warm server cache performs ZERO server-side
+compiles; submits are idempotent (content-keyed batches); a vanished
+batch is recovered by resubmission; an unreachable server fails jobs as
+*transient* — and transient outcomes never enter the score cache or mark
+an incumbent, across all four backends.
+"""
+import json
+import socket
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.configs import get_arch, get_shape
+from repro.core import ComParTuner, SweepDB
+from repro.core.backends import (JobGroup, JobSpec, Recorder, RemoteBackend,
+                                 ThreadBackend, WIRE_VERSION, make_backend)
+from repro.core.backends.server import SweepScoringServer, batch_id
+from repro.core.combinator import Combination
+from repro.core.executor import (CombinationFailed, CrashExecutor,
+                                 DryRunExecutor)
+from repro.core.segment import fragment
+from repro.core.tuner import SweepReport
+from repro.models.context import SegmentClause
+
+SPACE = {"remat": ("none", "full"), "kernel": ("xla",), "block_q": (16, 32),
+         "block_k": (16,), "scan_unroll": (1,), "mlstm_chunk": (16,)}
+
+
+def _plan_bytes(plan):
+    d = plan.to_json()
+    return json.dumps({"segments": d["segments"], "knobs": d["knobs"]},
+                      sort_keys=True).encode()
+
+
+def _tuner(db, project, mode="new"):
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    return ComParTuner(cfg, shape, mesh=None, db=db, project=project,
+                       mode=mode, executor="dryrun", timeout_s=120)
+
+
+def _sweep(tuner, **kw):
+    return tuner.sweep(providers=["tensor_par", "fsdp"], clause_space=SPACE,
+                       max_flags=1, use_cache=False, **kw)
+
+
+def _stats(url):
+    with urllib.request.urlopen(url + "/v1/stats", timeout=10) as r:
+        return json.loads(r.read())
+
+
+def _dead_url():
+    """A URL nothing listens on (bind a port, then release it)."""
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return f"http://127.0.0.1:{port}"
+
+
+@pytest.fixture
+def server(tmp_path):
+    srv = SweepScoringServer(str(tmp_path / "server.db"), workers=2)
+    srv.start()
+    yield srv
+    srv.close()
+
+
+# --- the acceptance invariant ------------------------------------------------
+
+
+def test_backend_equivalence_includes_remote_and_warm_server(server):
+    """sequential == thread == process == remote (loopback server), and a
+    second remote sweep against the warm server cache compiles NOTHING
+    server-side."""
+    plan_ref, rep_ref = _sweep(_tuner(SweepDB(":memory:"), "eq-seq"),
+                               backend="sequential")
+    ref = _plan_bytes(plan_ref)
+
+    plan_t, rep_t = _sweep(_tuner(SweepDB(":memory:"), "eq-thr"),
+                           backend="thread", workers=2)
+    assert _plan_bytes(plan_t) == ref
+
+    t_p = _tuner(SweepDB(":memory:"), "eq-prc")
+    try:
+        plan_p, rep_p = _sweep(t_p, backend="process", workers=2)
+    finally:
+        t_p.close()
+    assert _plan_bytes(plan_p) == ref
+
+    plan_r, rep_r = _sweep(_tuner(SweepDB(":memory:"), "eq-rem"),
+                           backend="remote", remote_url=server.url)
+    assert _plan_bytes(plan_r) == ref
+    assert (rep_r.n_done, rep_r.n_failed, rep_r.n_scored, rep_r.n_shared) \
+        == (rep_ref.n_done, 0, rep_ref.n_scored, rep_ref.n_shared)
+    cold = _stats(server.url)
+    assert cold["n_compiled"] == rep_ref.n_scored > 0
+
+    # cross-host amortization: a fresh client (empty local DB) is served
+    # everything from the server's score cache — zero new compiles
+    plan_w, rep_w = _sweep(_tuner(SweepDB(":memory:"), "eq-rem-warm"),
+                           remote_url=server.url)     # url implies remote
+    assert _plan_bytes(plan_w) == ref
+    assert rep_w.n_scored == 0
+    assert rep_w.n_cached == rep_w.n_combinations
+    warm = _stats(server.url)
+    assert warm["n_compiled"] == cold["n_compiled"], \
+        "warm remote sweep compiled server-side"
+    assert warm["n_cache_hits"] > cold["n_cache_hits"]
+
+
+# --- protocol contracts ------------------------------------------------------
+
+
+def _dry_init():
+    from repro.configs import arch_to_spec, shape_to_spec
+    from repro.core.backends import executor_to_spec
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    return {"executor": executor_to_spec(DryRunExecutor(None, timeout_s=60)),
+            "arch": arch_to_spec(cfg), "shape": shape_to_spec(shape),
+            "shape_key": "sk", "mesh_key": "mk"}
+
+
+def _post(url, payload):
+    req = urllib.request.Request(
+        url + "/v1/submit", data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req, timeout=10) as r:
+        return json.loads(r.read())
+
+
+def test_submit_is_idempotent_content_keyed(server):
+    payload = {"v": WIRE_VERSION, "run": "fixed-nonce", "init": _dry_init(),
+               "jobs": []}
+    a = _post(server.url, payload)
+    b = _post(server.url, payload)
+    assert a["batch"] == b["batch"] == batch_id(payload)
+    assert not a["resumed"] and b["resumed"]
+    assert _stats(server.url)["n_batches"] == 1
+    # a different run nonce is a different batch
+    c = _post(server.url, {**payload, "run": "other-nonce"})
+    assert c["batch"] != a["batch"] and not c["resumed"]
+
+
+def test_wire_version_mismatch_rejected(server):
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    backend = RemoteBackend(DryRunExecutor(None), cfg, shape,
+                            url=server.url, retry_s=1.0)
+    with pytest.raises(RuntimeError, match="HTTP 400"):
+        backend._request("/v1/submit", {"v": 99, "init": _dry_init(),
+                                        "jobs": []})
+
+
+def test_server_rejects_test_executor_specs_from_the_wire(tmp_path, server):
+    """``{"kind": "crash"}`` from an untrusted client would be a remote
+    kill switch for every worker — rejected at submit unless the server
+    opted in with --allow-test-executors."""
+    bad = {"v": WIRE_VERSION, "run": "n1",
+           "init": {**_dry_init(), "executor": {"kind": "crash"}},
+           "jobs": []}
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _post(server.url, bad)
+    assert ei.value.code == 400
+    trusting = SweepScoringServer(str(tmp_path / "trusting.db"),
+                                  workers=1, allow_test=True)
+    trusting.start()
+    try:
+        assert "batch" in _post(trusting.url, bad)   # empty batch: no spawn
+    finally:
+        trusting.close()
+
+
+def test_submit_404_raises_not_transient(server):
+    """A 404 on /v1/submit means the URL is not a scoring server (wrong
+    path, wrong service) — a protocol error that must raise, never a
+    sweep full of silent transient failures."""
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    seg = next(s for s in fragment(cfg) if s.kind == "stack")
+    combo = Combination("fsdp", frozenset(), SegmentClause())
+    backend = RemoteBackend(DryRunExecutor(None), cfg, shape,
+                            url=server.url + "/api", retry_s=1.0)
+    with pytest.raises(RuntimeError, match="HTTP 404"):
+        list(backend.run([JobSpec("j", seg, combo, segments=(seg.name,))]))
+
+
+def test_submit_validates_specs_eagerly(server):
+    """Deterministic payload errors (registry skew, malformed JobSpec)
+    are HTTP 400 at submit — not a batch that 'transiently' fails on
+    every retry forever."""
+    good = _dry_init()
+    bad_arch = {"v": WIRE_VERSION, "run": "n", "jobs": [],
+                "init": {**good, "arch": {"name": "no-such-arch"}}}
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _post(server.url, bad_arch)
+    assert ei.value.code == 400
+    bad_job = {"v": WIRE_VERSION, "run": "n", "init": good,
+               "jobs": [{"key": "k"}]}          # no seg/combo
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _post(server.url, bad_job)
+    assert ei.value.code == 400
+
+
+def test_backend_remote_requires_url():
+    with pytest.raises(ValueError, match="remote_url"):
+        _sweep(_tuner(SweepDB(":memory:"), "nourl"), backend="remote")
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    with pytest.raises(ValueError, match="remote_url"):
+        make_backend("remote", DryRunExecutor(None), cfg, shape)
+
+
+def test_vanished_batch_is_resubmitted_and_served_from_cache(server):
+    """The idempotent-recovery path: the server forgets a batch (restart/
+    eviction) mid-poll — the client resubmits its content-keyed payload
+    and the replacement batch resolves from the score cache."""
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    seg = next(s for s in fragment(cfg) if s.kind == "stack")
+    combo = Combination("fsdp", frozenset(), SegmentClause())
+    job = JobSpec("sig/ec", seg, combo, segments=(seg.name,),
+                  signature="sig", eff_cid="ec")
+
+    backend = RemoteBackend(DryRunExecutor(None, timeout_s=120), cfg, shape,
+                            url=server.url, shape_key="sk", mesh_key="mk",
+                            poll_s=0.2, retry_s=10.0)
+    submits = []
+    orig_submit = backend._submit
+
+    def evicting_submit(payload):
+        bid = orig_submit(payload)
+        submits.append(bid)
+        if len(submits) == 1 and bid is not None:
+            batch = server.batch(bid)
+            deadline = time.monotonic() + 120
+            while not batch.done and time.monotonic() < deadline:
+                time.sleep(0.02)
+            assert batch.done, "first batch never finished server-side"
+            with server._lock:
+                del server._batches[bid]
+        return bid
+
+    backend._submit = evicting_submit
+    outs = list(backend.run([job]))
+    assert len(submits) == 2 and submits[0] == submits[1]  # content-keyed
+    assert [o.status for o in outs] == ["done"]
+    assert outs[0].cached        # the resubmitted batch hit the cache
+    assert _stats(server.url)["n_compiled"] == 1
+
+
+def test_unreachable_server_fails_jobs_transient():
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    seg = next(s for s in fragment(cfg) if s.kind == "stack")
+    combo = Combination("fsdp", frozenset(), SegmentClause())
+    backend = RemoteBackend(DryRunExecutor(None), cfg, shape,
+                            url=_dead_url(), retry_s=0.3, backoff_s=0.05)
+    outs = list(backend.run([
+        JobSpec("a", seg, combo, segments=(seg.name,)),
+        JobSpec("b", seg, combo, segments=(seg.name,))]))
+    assert len(outs) == 2
+    assert all(o.status == "failed" and o.transient for o in outs)
+    assert all("unreachable" in o.error for o in outs)
+
+
+# --- the transient cache policy, end-to-end across all four backends ---------
+
+
+class _TransientExecutor:
+    """Raises a transient CombinationFailed for every job (the in-process
+    stand-in for a deadline overrun)."""
+    parallel_safe = True
+    timeout_s = None
+    cache_tag = "transient-test"
+    n_chips = 1
+
+    def score_segment(self, cfg, shape, seg, combo, knobs=None):
+        raise CombinationFailed("synthetic deadline overrun", transient=True)
+
+
+def _drive_policy(backend, jobs, db, tracker):
+    """Run jobs through a backend + Recorder and assert the transient
+    policy: every outcome failed+transient, nothing cached, no incumbent
+    marked."""
+    groups = {}
+    for job in jobs:
+        db.register("p", job.seg.name, job.combo)
+        groups[job.key] = JobGroup(
+            job.seg, job.combo, job.signature, job.eff_cid,
+            members=[(job.seg.name, job.combo.cid)])
+    rep = SweepReport("p", n_combinations=len(jobs))
+    rec = Recorder(db, "p", rep, shape_key="sk", mesh_key="mk",
+                   use_cache=True)
+    outs = []
+    for out in backend.run(jobs):
+        outs.append(out)
+        rec.outcome(groups[out.key], out)
+    rec.flush()
+    assert len(outs) == len(jobs)
+    assert all(o.status == "failed" and o.transient for o in outs)
+    assert rep.n_transient == len(jobs)
+    assert db.cache_size() == 0, "transient outcome leaked into score_cache"
+    assert tracker._best == {}, "transient outcome marked an incumbent"
+    assert all(r["status"] == "failed" for r in db.results("p"))
+
+
+@pytest.mark.parametrize("backend_name", ["sequential", "thread", "process",
+                                          "remote"])
+def test_transient_outcomes_never_cached_never_incumbent(backend_name,
+                                                         tmp_path):
+    """The satellite contract, per backend: transient failures (deadline
+    overrun, worker crash double-loss, remote connection loss) are
+    recorded as failed rows but never enter ``score_cache`` and never
+    tighten an incumbent."""
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    seg = next(s for s in fragment(cfg) if s.kind == "stack")
+    jobs = []
+    for i, provider in enumerate(("fsdp", "tensor_par")):
+        combo = Combination(provider, frozenset(), SegmentClause())
+        jobs.append(JobSpec(f"sig{i}/ec", seg, combo, segments=(seg.name,),
+                            signature=f"sig{i}", eff_cid="ec"))
+    db = SweepDB(str(tmp_path / f"{backend_name}.db"))
+    db.open_project("p", "new")
+
+    if backend_name in ("sequential", "thread"):
+        backend = ThreadBackend(_TransientExecutor(), cfg, shape,
+                                workers=1 if backend_name == "sequential"
+                                else 2)
+        tracker = backend.runner.tracker
+    elif backend_name == "process":
+        from repro.core.backends import ProcessBackend
+        backend = ProcessBackend(CrashExecutor(), cfg, shape, workers=1,
+                                 timeout_s=60)
+        tracker = backend.tracker
+    else:
+        backend = RemoteBackend(DryRunExecutor(None), cfg, shape,
+                                url=_dead_url(), retry_s=0.3,
+                                backoff_s=0.05)
+        tracker = backend.tracker
+    try:
+        _drive_policy(backend, jobs, db, tracker)
+        if backend_name in ("process", "remote"):
+            # these backends rebuild their tracker per run()
+            assert backend.tracker._best == {}
+    finally:
+        backend.close()

@@ -846,6 +846,193 @@ def test_incumbents_are_scoped_per_knob_point():
     assert rep_pr.per_knob_total_s == rep_ref.per_knob_total_s
 
 
+# --- PR 4 hardening satellites -----------------------------------------------
+
+
+def test_cache_put_many_keep_best_semantics(tmp_path):
+    """insert-if-absent / keep-best: a stale batch can never clobber a
+    fresher equal-or-better row (the INSERT OR REPLACE regression)."""
+    db = SweepDB(str(tmp_path / "kb.db"))
+    key = dict(signature="s", shape="sh", mesh="m", cid="c")
+    db.cache_put_many([{**key, "status": "done", "cost": {"total_s": 1.0}}])
+    # a stale in-flight batch with a worse score does NOT clobber...
+    db.cache_put_many([{**key, "status": "done", "cost": {"total_s": 2.0}}])
+    assert db.cache_get("s", "sh", "m", "c")["cost"]["total_s"] == 1.0
+    # ...a strictly better score does win...
+    db.cache_put_many([{**key, "status": "done", "cost": {"total_s": 0.5}}])
+    assert db.cache_get("s", "sh", "m", "c")["cost"]["total_s"] == 0.5
+    # ...an equal score keeps the incumbent (first-writer-wins)...
+    db.cache_put_many([{**key, "status": "done", "cost": {"total_s": 0.5,
+                                                          "flops": 99.0}}])
+    assert "flops" not in db.cache_get("s", "sh", "m", "c")["cost"]
+    # ...and a failure never displaces a done row
+    db.cache_put_many([{**key, "status": "failed", "error": "boom"}])
+    hit = db.cache_get("s", "sh", "m", "c")
+    assert hit["status"] == "done" and hit["cost"]["total_s"] == 0.5
+    # done DOES displace failed
+    key2 = dict(signature="s2", shape="sh", mesh="m", cid="c")
+    db.cache_put_many([{**key2, "status": "failed", "error": "boom"}])
+    db.cache_put_many([{**key2, "status": "done", "cost": {"total_s": 3.0}}])
+    assert db.cache_get("s2", "sh", "m", "c")["status"] == "done"
+    assert db.cache_size() == 2
+
+
+def test_cache_put_many_two_interleaved_writers(tmp_path):
+    """The regression scenario: two sweeps on one DB file, the slower
+    one's in-flight batch lands after the fresher (better) row — the
+    better row must survive, and both connections must see it."""
+    path = str(tmp_path / "shared.db")
+    a, b = SweepDB(path), SweepDB(path)
+    key = dict(signature="s", shape="sh", mesh="m", cid="c")
+    # both sweeps scored the same group; b commits first with the better
+    # score, a's stale batch replays afterwards
+    b.cache_put_many([{**key, "status": "done", "cost": {"total_s": 1.0}}])
+    a.cache_put_many([{**key, "status": "done", "cost": {"total_s": 1.5}}])
+    for conn in (a, b):
+        assert conn.cache_get("s", "sh", "m", "c")["cost"]["total_s"] == 1.0
+    # interleaved failure/success across connections
+    key2 = dict(signature="s2", shape="sh", mesh="m", cid="c")
+    a.cache_put_many([{**key2, "status": "done", "cost": {"total_s": 2.0}}])
+    b.cache_put_many([{**key2, "status": "failed", "error": "stale"}])
+    assert b.cache_get("s2", "sh", "m", "c")["status"] == "done"
+
+
+def test_score_cache_migrates_pre_total_s_schema(tmp_path):
+    """A DB created before the keep-best column exists is migrated in
+    place, including backfilled totals so legacy rows stay beatable."""
+    import sqlite3
+
+    path = str(tmp_path / "old.db")
+    conn = sqlite3.connect(path)
+    conn.execute(
+        "CREATE TABLE score_cache (signature TEXT, shape TEXT, mesh TEXT, "
+        "cid TEXT, status TEXT, cost TEXT, error TEXT, created REAL, "
+        "PRIMARY KEY (signature, shape, mesh, cid))")
+    conn.execute(
+        "INSERT INTO score_cache VALUES ('s','sh','m','c','done',"
+        "'{\"total_s\": 2.0}','',0)")
+    conn.commit()
+    conn.close()
+    db = SweepDB(path)
+    assert db.cache_get("s", "sh", "m", "c")["cost"]["total_s"] == 2.0
+    # keep-best works against the migrated row: better wins, worse doesn't
+    db.cache_put_many([{"signature": "s", "shape": "sh", "mesh": "m",
+                        "cid": "c", "status": "done",
+                        "cost": {"total_s": 3.0}}])
+    assert db.cache_get("s", "sh", "m", "c")["cost"]["total_s"] == 2.0
+    db.cache_put_many([{"signature": "s", "shape": "sh", "mesh": "m",
+                        "cid": "c", "status": "done",
+                        "cost": {"total_s": 1.0}}])
+    assert db.cache_get("s", "sh", "m", "c")["cost"]["total_s"] == 1.0
+
+
+def test_legacy_done_row_without_total_stays_beatable(tmp_path):
+    """A 'done' row whose cost blob carries no total (so the migration
+    backfill left total_s NULL) must not become an unbeatable fixed
+    point of the keep-best comparison."""
+    db = SweepDB(str(tmp_path / "nl.db"))
+    db.conn.execute(
+        "INSERT INTO score_cache (signature, shape, mesh, cid, status, "
+        "cost, error, created, total_s) VALUES "
+        "('s','sh','m','c','done','{}','',0,NULL)")
+    db.conn.commit()
+    db.cache_put_many([{"signature": "s", "shape": "sh", "mesh": "m",
+                        "cid": "c", "status": "done",
+                        "cost": {"total_s": 5.0}}])
+    assert db.cache_get("s", "sh", "m", "c")["cost"]["total_s"] == 5.0
+
+
+def test_next_job_skips_excluded_worker():
+    """Dispatch unit: a job is never handed back to a worker id it died
+    on; a non-excluded worker still gets it, in queue order."""
+    from collections import deque
+
+    from repro.core.backends import JobSpec, ProcessBackend
+    from repro.core.backends.process import _Worker
+    from repro.core.executor import SleepExecutor
+
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    seg = next(s for s in fragment(cfg) if s.kind == "stack")
+    combo = Combination("fsdp", frozenset(), SegmentClause())
+    backend = ProcessBackend(SleepExecutor(sleep_s=0.01), cfg, shape,
+                             workers=2)
+    j1 = JobSpec("j1", seg, combo, segments=(seg.name,))
+    j2 = JobSpec("j2", seg, combo, segments=(seg.name,))
+    excluded = {"j1": {0}}
+    w0, w1 = _Worker(None, None, 0), _Worker(None, None, 1)
+
+    queue = deque([j1, j2])
+    job, pruned = backend._next_job(w0, queue, excluded, {})
+    assert job is j2 and not pruned      # j1 skipped, left for another worker
+    assert list(queue) == [j1]
+    job, _ = backend._next_job(w1, queue, excluded, {})
+    assert job is j1 and not queue
+
+
+def test_crash_requeue_dispatches_to_a_different_worker():
+    """The requeue-diversification satellite, end-to-end: a job whose
+    program kills its worker is retried on a DIFFERENT worker id — the
+    lost worker (and whatever inherits its slot) is excluded."""
+    from repro.core.backends import JobSpec, ProcessBackend
+    from repro.core.executor import CrashExecutor
+
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    seg = next(s for s in fragment(cfg) if s.kind == "stack")
+    combo = Combination("fsdp", frozenset(), SegmentClause())
+
+    backend = ProcessBackend(CrashExecutor(), cfg, shape, workers=2,
+                             timeout_s=60)
+    try:
+        backend.warmup()
+        outs = list(backend.run(
+            [JobSpec("boom", seg, combo, segments=(seg.name,))]))
+    finally:
+        backend.close()
+    assert len(outs) == 1
+    assert outs[0].status == "failed" and outs[0].transient
+    assert outs[0].attempts == 2
+    log = backend.dispatch_log
+    assert [k for k, _ in log] == ["boom", "boom"]
+    wids = [w for _, w in log]
+    assert wids[0] != wids[1], "retry burned on the worker the job died on"
+
+
+def test_sweep_after_injected_failure_completes(monkeypatch):
+    """tuner exception-safety: an error mid-sweep must not leave the
+    cached process engine poisoned — the next sweep on the same tuner
+    culls dead workers and completes; close() stays idempotent."""
+    import repro.core.tuner as T
+
+    db = SweepDB(":memory:")
+    tuner, _, _ = _tuner(db, "injected")
+
+    class BoomRecorder(T.Recorder):
+        def outcome(self, group, out):
+            raise RuntimeError("injected recorder failure")
+
+    with monkeypatch.context() as m:
+        m.setattr(T, "Recorder", BoomRecorder)
+        with pytest.raises(RuntimeError, match="injected"):
+            _sweep(tuner, backend="process", workers=1, use_cache=False)
+
+    assert len(tuner._engines) == 1
+    engine = next(iter(tuner._engines.values()))
+    # simulate the aborted sweep also stranding dead workers in the pool
+    for w in list(engine._pool):
+        w.proc.terminate()
+        w.proc.join(timeout=10)
+    # the same tuner/project sweeps to completion (rows are still pending)
+    plan, rep = _sweep(tuner, backend="process", workers=1, use_cache=False)
+    assert rep.n_done == rep.n_combinations and rep.n_failed == 0
+    assert next(iter(tuner._engines.values())) is engine  # engine reused
+    assert all(w.proc.is_alive() for w in engine._pool)
+    tuner.close()
+    tuner.close()                       # idempotent
+    assert tuner._engines == {}
+
+
 def test_build_contexts_records_substitution(caplog):
     """A plan missing a segment must substitute loudly: warning + meta."""
     import logging
