@@ -26,6 +26,15 @@ With ``--globals`` an ``engine-cold-knobaxis2x`` row sweeps a 2-point
 and the run asserts the engine compiled nothing extra — the knob-
 relevance projection makes the outer axis ~free.
 
+With ``--mesh-space`` two rows sweep the topology axis
+(``mesh_space=[local, data2]`` — ``data1`` on single-device hosts) on
+the *selected* backend: ``engine-cold-meshaxis2x`` and
+``engine-warm-meshaxis2x``.  The warm row asserts ZERO recompiles (the
+per-point cache keys hit) and both fuse the same plan with the same
+CHOSEN mesh — multi-device sweeps through the declarative MeshSpec wire
+format, on whatever backend ``--backend`` picked (including process and
+remote: the old thread-only fallback for meshed sweeps is gone).
+
 Asserts the fused plans of all runs are identical (the engine is an
 optimization, not an approximation) and reports speedups vs seed-style.
 
@@ -56,7 +65,7 @@ def _sweep(db, project, cfg, shape, space, **kw):
 def run(quick: bool = False, arch: str = "granite-8b",
         shape_name: str = "train_4k", workers: int = 0,
         backend: str = "thread", assert_speedup: float = 0.0,
-        globals_axis: bool = False):
+        globals_axis: bool = False, mesh_axis: bool = False):
     from repro.configs import get_arch, get_shape
     from repro.core.db import SweepDB
 
@@ -171,6 +180,46 @@ def run(quick: bool = False, arch: str = "granite-8b",
                 (f"non-reaching knob axis recompiled: {rep4.n_scored} "
                  f"vs {rep1.n_scored}")
             rows.append(("engine-cold-knobaxis2x", t_knob, rep4))
+
+        if mesh_axis:
+            # the topology axis, on the SELECTED backend: cold sweeps
+            # both mesh points (MeshSpec wire format — process/remote
+            # workers rebuild the mesh themselves), warm recompiles
+            # nothing and fuses the identical plan + chosen mesh
+            import jax
+            mspace = [None, {"data": min(2, len(jax.devices()))}]
+            mkw = {"backend": backend if backend != "both" else "process",
+                   "workers": workers}
+            msrv = None
+            if mkw["backend"] == "remote":
+                from repro.core.backends.server import SweepScoringServer
+                msrv = SweepScoringServer(
+                    os.path.join(tmp, "mesh-server.db"), workers=workers)
+                mkw["remote_url"] = msrv.start()
+            try:
+                mdb = SweepDB(os.path.join(tmp, "mesh.db"))
+                plan7, rep7, t_mcold = _sweep(
+                    mdb, "mesh-cold", cfg, shape, space, use_cache=True,
+                    prune=True, mesh_space=mspace, **mkw)
+                plan8, rep8, t_mwarm = _sweep(
+                    mdb, "mesh-warm", cfg, shape, space, use_cache=True,
+                    prune=True, mesh_space=mspace, **mkw)
+            finally:
+                if msrv is not None:
+                    msrv.close()
+            assert rep7.n_mesh_points == rep8.n_mesh_points == 2
+            assert plan7.mesh is not None, "no mesh was chosen"
+            assert (plan8.segments, plan8.knobs, plan8.mesh) == \
+                (plan7.segments, plan7.knobs, plan7.mesh), \
+                "warm mesh-axis sweep changed the plan!"
+            assert rep8.n_scored == 0, \
+                (f"warm mesh-axis sweep recompiled {rep8.n_scored} "
+                 "programs (per-point cache keys missed)")
+            print(f"# mesh axis: chosen {plan7.mesh.key()} of "
+                  f"{list(rep7.per_mesh_total_s)} "
+                  f"(backend={mkw['backend']})")
+            rows.append(("engine-cold-meshaxis2x", t_mcold, rep7))
+            rows.append(("engine-warm-meshaxis2x", t_mwarm, rep8))
         print(f"# arch={cfg.name} shape={shape.name} combos={n} "
               f"workers={workers} backend={backend} quick={quick}")
         print("name,combos_per_s,seconds,scored,cached,pruned,speedup_vs_seed")
@@ -198,10 +247,16 @@ def main():
     ap.add_argument("--globals", dest="globals_axis", action="store_true",
                     help="add a 2-point non-reaching GlobalKnobs axis row "
                          "(2x rows, must compile nothing extra)")
+    ap.add_argument("--mesh-space", dest="mesh_axis", action="store_true",
+                    help="add cold+warm 2-point mesh/topology axis rows on "
+                         "the selected backend (warm must recompile "
+                         "nothing); multi-device points need "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count")
     args = ap.parse_args()
     run(quick=args.quick, arch=args.arch, shape_name=args.shape,
         workers=args.workers, backend=args.backend,
-        assert_speedup=args.assert_speedup, globals_axis=args.globals_axis)
+        assert_speedup=args.assert_speedup, globals_axis=args.globals_axis,
+        mesh_axis=args.mesh_axis)
 
 
 if __name__ == "__main__":

@@ -13,7 +13,7 @@ against ITS score cache first — any host that ever scored the same
 programs against that server makes this sweep free.
 
     PYTHONPATH=src python examples/compar_sweep_json.py [--backend B]
-        [--remote-url http://host:8477]
+        [--remote-url http://host:8477] [--mesh-space]
 """
 import argparse
 import json
@@ -35,14 +35,26 @@ SWEEP_SPEC = {
     "globals": {"microbatches": [1, 2]},
 }
 
+#: the topology axis (--mesh-space): local vs a 2-way data-parallel
+#: mesh, raced as a second outer dimension.  Needs >=2 local devices
+#: (CI runs it under XLA_FLAGS=--xla_force_host_platform_device_count=4);
+#: the plan's mesh is CHOSEN by the joint argmin, and meshed points
+#: score on the process/remote backends like any other job — the specs
+#: are JSON, so workers rebuild the mesh themselves.
+MESH_SPACE = [None, {"data": 2}]
 
-def main(backend: str = "thread", remote_url: str = None):
+
+def main(backend: str = "thread", remote_url: str = None,
+         mesh_space: bool = False):
+    spec = dict(SWEEP_SPEC)
+    if mesh_space:
+        spec["meshes"] = MESH_SPACE
     spec_path = os.path.join(tempfile.gettempdir(), "sweep_spec.json")
     with open(spec_path, "w") as f:
-        json.dump(SWEEP_SPEC, f, indent=2)
+        json.dump(spec, f, indent=2)
     print(f"sweep spec written to {spec_path}")
 
-    providers, clause_space, global_space = load_sweep_json(spec_path)
+    providers, clause_space, global_space, meshes = load_sweep_json(spec_path)
     cfg = get_arch("stablelm-3b").smoke()
     shape = get_shape("train_4k").smoke()
 
@@ -55,17 +67,23 @@ def main(backend: str = "thread", remote_url: str = None):
     if remote_url:
         print(f"scoring remotely against {remote_url}")
     # first run: New mode, with the sweep-engine knobs on (parallel
-    # scoring + exact lower-bound pruning; see docs/sweep_engine.md) and
-    # the JSON spec's "globals" grid as the outer knob axis
+    # scoring + exact lower-bound pruning; see docs/sweep_engine.md),
+    # the JSON spec's "globals" grid as the outer knob axis, and — with
+    # --mesh-space — its "meshes" list as the topology axis
     tuner = ComParTuner(cfg, shape, mesh=None, db=db, project="json-demo",
                         mode="new", executor="dryrun")
     plan, rep = tuner.sweep(providers=providers, clause_space=clause_space,
-                            global_space=global_space, max_flags=1,
+                            global_space=global_space, mesh_space=meshes,
+                            max_flags=1,
                             backend=backend, workers=workers, prune=True,
                             remote_url=remote_url)
     print("first run:", rep.summary())
     assert rep.n_knob_points == 2
     print("per-knob fused totals:", rep.per_knob_total_s)
+    if meshes is not None:
+        assert rep.n_mesh_points == len(MESH_SPACE)
+        assert plan.mesh is not None       # the topology was chosen
+        print("per-mesh fused totals:", rep.per_mesh_total_s)
 
     # second run: Continue mode — everything cached, near-instant
     db2 = SweepDB(db_path)
@@ -75,11 +93,13 @@ def main(backend: str = "thread", remote_url: str = None):
     plan2, rep2 = tuner2.sweep(providers=providers,
                                clause_space=clause_space,
                                global_space=global_space,
+                               mesh_space=meshes,
                                max_flags=1, backend=backend,
                                remote_url=remote_url)
     print("continue run:", rep2.summary())
     assert rep2.elapsed_s < rep.elapsed_s
     assert plan2.knobs == plan.knobs       # the joint argmin is stable
+    assert plan2.mesh == plan.mesh
     print("\nfused plan (knobs chosen by the sweep, not supplied):")
     print(plan2.describe())
 
@@ -92,4 +112,7 @@ if __name__ == "__main__":
                     help="sweep scoring server URL (python -m "
                          "repro.core.backends.server); implies "
                          "--backend remote")
+    ap.add_argument("--mesh-space", dest="mesh_space", action="store_true",
+                    help="also sweep the JSON 'meshes' topology axis "
+                         "(local vs data=2; needs >=2 local devices)")
     main(**vars(ap.parse_args()))

@@ -11,6 +11,9 @@ from repro.core.combinator import (  # noqa: F401
 from repro.core.cost_model import CostTerms, Hardware, V5E  # noqa: F401
 from repro.core.db import SweepDB  # noqa: F401
 from repro.core.fusion import best_uniform, fuse, fuse_joint  # noqa: F401
+from repro.core.meshspec import (  # noqa: F401
+    LOCAL, MeshSpec, MeshUnsatisfiable, as_mesh_point,
+)
 from repro.core.plan import Plan, build_contexts, uniform_plan  # noqa: F401
 from repro.core.segment import Segment, fragment  # noqa: F401
 from repro.core.tuner import ComParTuner, SweepReport  # noqa: F401

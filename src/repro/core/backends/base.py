@@ -24,6 +24,7 @@ from dataclasses import dataclass, field
 from typing import Dict, Iterator, Optional, Sequence, Tuple
 
 from repro.core.combinator import Combination, GlobalKnobs
+from repro.core.meshspec import MeshSpec
 from repro.core.segment import Segment
 
 #: version of the JSON wire format: JobSpec/JobOutcome payloads, the
@@ -32,7 +33,13 @@ from repro.core.segment import Segment
 #: must reject (not guess at) payloads from a different format era,
 #: because a misdecoded spec would be scored and *cached* under the
 #: wrong key on every host sharing that server.
-WIRE_VERSION = 1
+#:
+#: v2 added the mesh axis: ``JobSpec.mesh``/``mesh_key`` and the
+#: executor init spec's ``mesh`` (a MeshSpec, rebuilt by whichever
+#: process scores the job).  A v1 server would silently score meshed
+#: jobs mesh-less and cache them under the meshed key — exactly the
+#: misdecode the version gate exists to prevent.
+WIRE_VERSION = 2
 
 
 class WireVersionError(ValueError):
@@ -65,12 +72,24 @@ class JobSpec:
     = score without knob effects, the pre-knob behavior for hand-built
     jobs).  ``segments`` lists the incumbent *scopes* whose rows share
     this program — Scheduler-built jobs use ``"<knob kid>/<segment>"``
-    keys so pruning compares against the right knob point's incumbents;
+    keys (``"<mesh mid>/<knob kid>/<segment>"`` when the mesh is swept)
+    so pruning compares against the right point's incumbents;
     the tracker treats them as opaque strings.  ``signature``/``eff_cid``
     are the group's persistent-cache key components, shipped so a worker
-    can consult the shared score cache itself.  Field layout is
-    compatible with :class:`repro.core.executor.SweepJob` so the thread
-    backend can feed specs straight into ``ParallelSweepRunner``.
+    can consult the shared score cache itself.
+
+    ``mesh`` is the swept topology point the program must be built
+    under, as a declarative :class:`~repro.core.meshspec.MeshSpec` —
+    whichever process scores the job materializes it against its own
+    local devices (``meshspec.cached_mesh``).  ``None`` = the executor's
+    own (fixed) mesh, which travels in the executor init spec; the local
+    point of a swept axis is the explicit ``MeshSpec(())``.  ``mesh_key``
+    is the score-cache environment column for this job's point (``""`` =
+    the pipeline default from the init message) — shipped, not
+    re-derived, so client and server can never key the same score
+    differently.  Field layout is compatible with
+    :class:`repro.core.executor.SweepJob` so the thread backend can feed
+    specs straight into ``ParallelSweepRunner``.
     """
     key: str
     seg: Segment
@@ -80,6 +99,8 @@ class JobSpec:
     signature: str = ""
     eff_cid: str = ""
     knobs: Optional[GlobalKnobs] = None
+    mesh: Optional[MeshSpec] = None
+    mesh_key: str = ""
 
     def to_json(self) -> Dict:
         return {"key": self.key, "seg": self.seg.to_json(),
@@ -87,7 +108,10 @@ class JobSpec:
                 "segments": list(self.segments), "bound_s": self.bound_s,
                 "signature": self.signature, "eff_cid": self.eff_cid,
                 "knobs": self.knobs.to_json()
-                if self.knobs is not None else None}
+                if self.knobs is not None else None,
+                "mesh": self.mesh.to_json()
+                if self.mesh is not None else None,
+                "mesh_key": self.mesh_key}
 
     @classmethod
     def from_json(cls, d: Dict) -> "JobSpec":
@@ -97,7 +121,10 @@ class JobSpec:
                    float(d.get("bound_s", 0.0)),
                    d.get("signature", ""), d.get("eff_cid", ""),
                    GlobalKnobs.from_json(d["knobs"])
-                   if d.get("knobs") else None)
+                   if d.get("knobs") else None,
+                   MeshSpec.from_json(d["mesh"])
+                   if d.get("mesh") else None,
+                   d.get("mesh_key", ""))
 
 
 @dataclass
@@ -138,7 +165,11 @@ class JobGroup:
     ``knobs`` is the representative knob point the program is built
     under (any member's point projects to the same program, by the
     effective-cid grouping).  ``scopes`` are the ``"<knob kid>/<segment>"``
-    incumbent keys of every member — the per-knob-point pruning scope.
+    incumbent keys of every member — the per-knob-point pruning scope
+    (mesh-qualified when the mesh is swept).  ``mesh`` is the swept mesh
+    point (``None`` = unswept, the executor's fixed mesh) and
+    ``mesh_key`` its score-cache environment column (``""`` = the
+    pipeline default) — the Recorder banks this group's score under it.
     """
     seg: Segment
     combo: Combination
@@ -147,6 +178,8 @@ class JobGroup:
     members: list = field(default_factory=list)   # [(segment, row_cid), ...]
     knobs: Optional[GlobalKnobs] = None
     scopes: set = field(default_factory=set)
+    mesh: Optional[MeshSpec] = None
+    mesh_key: str = ""
 
 
 class IncumbentTracker:
@@ -208,27 +241,29 @@ class ScoringBackend:
 
 
 def executor_to_spec(executor) -> Dict:
-    """Serialize an executor for worker-side reconstruction."""
+    """Serialize an executor for worker-side reconstruction.
+
+    A fixed-mesh executor serializes its mesh as a declarative
+    :class:`~repro.core.meshspec.MeshSpec` (device handles never cross
+    the wire); :func:`executor_from_spec` materializes it against the
+    *scoring* process's local devices — so meshed sweeps run on the
+    process and remote backends exactly like local ones.
+    """
     import dataclasses
 
     from repro.core.executor import (CrashExecutor, DryRunExecutor,
                                      SleepExecutor, WallClockExecutor)
-    if getattr(executor, "mesh", None) is not None:
-        # a worker would rebuild the executor mesh-less and silently
-        # score different programs under the meshed cache key; the tuner
-        # falls back to the thread backend for meshed sweeps — a direct
-        # ProcessBackend construction must fail just as loudly
-        raise TypeError(
-            f"{type(executor).__name__} holds a mesh: device handles "
-            "don't serialize, use the thread backend for meshed sweeps")
+    mesh = getattr(executor, "mesh", None)
+    mesh_spec = MeshSpec.from_mesh(mesh).to_json() if mesh is not None \
+        else None
     if isinstance(executor, DryRunExecutor):
         # hw is cache identity (cache_tag embeds hw.name): the worker
         # must score with the parent's hardware model, not the default
         return {"kind": "dryrun", "timeout_s": executor.timeout_s,
-                "hw": dataclasses.asdict(executor.hw)}
+                "hw": dataclasses.asdict(executor.hw), "mesh": mesh_spec}
     if isinstance(executor, WallClockExecutor):
         return {"kind": "wallclock", "timeout_s": executor.timeout_s,
-                "repeats": executor.repeats}
+                "repeats": executor.repeats, "mesh": mesh_spec}
     if isinstance(executor, SleepExecutor):
         return {"kind": "sleep", "sleep_s": executor.sleep_s,
                 "timeout_s": executor.timeout_s}
@@ -239,8 +274,10 @@ def executor_to_spec(executor) -> Dict:
 
 
 def executor_from_spec(spec: Dict, *, allow_test: bool = False):
-    """Rebuild an executor in a worker process (mesh-less: meshes are not
-    serializable, so the process backend is gated to local sweeps).
+    """Rebuild an executor in the scoring process, materializing its
+    fixed mesh (if any) against local devices —
+    :class:`~repro.core.meshspec.MeshUnsatisfiable` if this host can't
+    (the scoring server maps that to HTTP 400 at submit).
 
     ``allow_test`` admits the fault-injection executors (sleep/crash).
     Local process workers pass True — they trust their parent (same
@@ -251,12 +288,15 @@ def executor_from_spec(spec: Dict, *, allow_test: bool = False):
     from repro.core.cost_model import Hardware, V5E
     from repro.core.executor import (CrashExecutor, DryRunExecutor,
                                      SleepExecutor, WallClockExecutor)
+    from repro.core.meshspec import cached_mesh
     kind = spec["kind"]
+    mesh = cached_mesh(MeshSpec.from_json(spec["mesh"])) \
+        if spec.get("mesh") else None
     if kind == "dryrun":
         hw = Hardware(**spec["hw"]) if spec.get("hw") else V5E
-        return DryRunExecutor(None, hw=hw, timeout_s=spec.get("timeout_s"))
+        return DryRunExecutor(mesh, hw=hw, timeout_s=spec.get("timeout_s"))
     if kind == "wallclock":
-        return WallClockExecutor(None, repeats=spec.get("repeats", 5),
+        return WallClockExecutor(mesh, repeats=spec.get("repeats", 5),
                                  timeout_s=spec.get("timeout_s"))
     if allow_test and kind == "sleep":
         return SleepExecutor(sleep_s=spec.get("sleep_s", 3600.0),

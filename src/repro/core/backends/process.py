@@ -52,14 +52,28 @@ _SPAWN_TIMEOUT_S = 120  # budget for a worker to import jax and report ready
 def _score_one(executor, cfg, shape, spec: JobSpec, cache, shape_key: str,
                mesh_key: str) -> JobOutcome:
     from repro.core.executor import CombinationFailed
+    # a mesh-axis job carries its own cache environment column; the init
+    # message's mesh_key covers fixed-mesh/local jobs
+    env = spec.mesh_key or mesh_key
     if cache is not None and spec.signature:
-        hit = cache.get(spec.signature, shape_key, mesh_key, spec.eff_cid)
+        hit = cache.get(spec.signature, shape_key, env, spec.eff_cid)
         if hit is not None and hit["status"] in (DONE, FAILED):
             return JobOutcome(spec.key, hit["status"], cost=hit["cost"],
                               error=hit["error"], cached=True)
+    kw = {}
+    if spec.mesh is not None:
+        # the swept topology point: THIS worker materializes the spec
+        # against its own local devices (memoized across its jobs)
+        from repro.core.meshspec import MeshUnsatisfiable, cached_mesh
+        try:
+            kw["mesh"] = cached_mesh(spec.mesh)
+        except MeshUnsatisfiable as e:
+            # environment-dependent (another host may have the devices):
+            # transient, so it is retryable and never cached
+            return JobOutcome(spec.key, FAILED, error=str(e), transient=True)
     try:
         cost = executor.score_segment(cfg, shape, spec.seg, spec.combo,
-                                      knobs=spec.knobs)
+                                      knobs=spec.knobs, **kw)
     except CombinationFailed as e:
         return JobOutcome(spec.key, FAILED, error=str(e),
                           transient=getattr(e, "transient", False))

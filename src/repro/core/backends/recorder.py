@@ -69,9 +69,12 @@ class Recorder:
             elif out.status == FAILED and out.transient:
                 rep.n_transient += len(group.members)
             if self.use_cache and not out.transient:
+                # a mesh-axis group banks under ITS point's environment
+                # column (set by the Scheduler), not the pipeline default
                 self._cache.append(
                     {"signature": group.signature, "shape": self.shape_key,
-                     "mesh": self.mesh_key, "cid": group.eff_cid,
+                     "mesh": group.mesh_key or self.mesh_key,
+                     "cid": group.eff_cid,
                      "status": out.status, "cost": out.cost,
                      "error": out.error})
         self._maybe_flush()

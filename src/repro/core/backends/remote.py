@@ -67,8 +67,9 @@ class RemoteBackend(ScoringBackend):
         self.poll_s = poll_s        # long-poll window per outcomes request
         self.retry_s = retry_s      # connection-retry budget per request
         self.backoff_s = backoff_s
-        # executor_to_spec raises on meshed executors — same loud-failure
-        # gate as the process backend (device handles don't serialize)
+        # a fixed-mesh executor ships its mesh as a declarative MeshSpec
+        # (executor_to_spec); the server materializes it against its own
+        # devices — or rejects the submit with HTTP 400 if it can't
         self._init = {
             "executor": executor_to_spec(executor),
             "arch": arch_to_spec(cfg),

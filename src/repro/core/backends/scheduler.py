@@ -9,8 +9,6 @@ Extracted from the monolithic ``ComParTuner._execute``.
 """
 from __future__ import annotations
 
-import hashlib
-import json
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -21,6 +19,7 @@ from repro.core.combinator import (Combination, GlobalKnobs, effective_cid,
                                    mapping_key, row_cid)
 from repro.core.cost_model import CostTerms, V5E, combo_lower_bound
 from repro.core.db import SweepDB
+from repro.core.meshspec import MeshSpec
 from repro.core.segment import Segment
 from repro.core.validator import validate_combination
 
@@ -33,13 +32,17 @@ def shape_key(shape: ShapeConfig) -> str:
 
 
 def mesh_key(mesh) -> str:
+    """Mesh content key for the ``score_cache.mesh`` column: the
+    versioned :attr:`MeshSpec.mid` (``"local"`` for no mesh).  Accepts a
+    live ``jax.Mesh``, a :class:`MeshSpec`, or ``None`` — a fixed live
+    mesh and a swept spec with the same content produce the SAME key, so
+    fixed-mesh and mesh-axis sweeps share cache rows.  The version bump
+    (``meshspec.MESH_KEY_VERSION``) means rows written by the pre-spec
+    engine can never alias spec-keyed ones."""
     if mesh is None:
         return "local"
-    dev = mesh.devices.flat[0]
-    blob = json.dumps({"axes": list(mesh.axis_names),
-                       "shape": [int(d) for d in mesh.devices.shape],
-                       "platform": str(getattr(dev, "platform", "?"))})
-    return hashlib.sha1(blob.encode()).hexdigest()[:12]
+    spec = mesh if isinstance(mesh, MeshSpec) else MeshSpec.from_mesh(mesh)
+    return spec.mid
 
 
 def env_key(mesh, executor) -> str:
@@ -92,71 +95,108 @@ class Scheduler:
     def build(self, segs: Sequence[Segment],
               per_seg_combos: Dict[str, List[Combination]],
               recorder: Recorder,
-              knob_points: Optional[Sequence[GlobalKnobs]] = None
+              knob_points: Optional[Sequence[GlobalKnobs]] = None,
+              mesh_points: Optional[Sequence[MeshSpec]] = None
               ) -> SweepWork:
         """Group, validate, cache-resolve, bound and order the pending
-        rows of every (segment, combination, knob point) triple.  Invalid
-        rows and cache hits are settled through the recorder; everything
-        else becomes a JobSpec.
+        rows of every (segment, combination, knob point, mesh point)
+        tuple.  Invalid rows and cache hits are settled through the
+        recorder; everything else becomes a JobSpec.
 
         Rows across knob points whose relevant knob projection agrees
         land in the same group (one compile); incumbents — and therefore
         pruning — are scoped per ``"<knob kid>/<segment>"`` so one knob
         point's best never prunes another point's per-segment argmin.
+
+        ``mesh_points`` (``None`` = the mesh is not swept: today's
+        single fixed-mesh behavior) adds the topology axis: every point
+        gets its own row ids (``row_cid(..., mesh=point)``), its own
+        score-cache environment column (``<mid>/<cache_tag>``), its own
+        mesh-qualified incumbent scopes (``<mid>/<kid>/<segment>``) and
+        its own lower bounds (divided by the *point's* chip count) —
+        groups never span mesh points, because two topologies never
+        share a compiled program's environment.
         """
         points = list(knob_points) if knob_points else [GlobalKnobs()]
+        swept_mesh = mesh_points is not None
+        mpoints: List[Optional[MeshSpec]] = \
+            list(mesh_points) if swept_mesh else [None]
         work = SweepWork(shape_key=self.shape_key, mesh_key=self.mesh_key)
         statuses = self.db.statuses(self.project)
 
-        # incumbent best per (knob point, segment), seeded from prior
-        # rows (resume); pre-knob rows carry no knobs = the default point
+        # incumbent best per (mesh point, knob point, segment), seeded
+        # from prior rows (resume); pre-knob rows carry no knobs = the
+        # default point, pre-mesh/fixed-mesh rows carry no mesh = the
+        # unqualified scope
         for r in self.db.results(self.project):
             if r["status"] == "done" and r["cost"]:
                 t = CostTerms.from_dict(r["cost"]).total_s
                 scope = f"{(r['knobs'] or GlobalKnobs()).kid}/{r['segment']}"
+                if r["mesh"] is not None:
+                    scope = f"{r['mesh'].mid}/{scope}"
                 cur = work.incumbents.get(scope)
                 if cur is None or t < cur:
                     work.incumbents[scope] = t
 
-        # group pending rows by structural program identity
+        # group pending rows by structural program identity (never
+        # across mesh points: the group key carries the point's mid)
         valid_memo: Dict[str, Tuple[bool, str]] = {}
-        map_memo: Dict[Tuple[str, str], str] = {}
-        for kn in points:
-            gid = kn.kid
-            for seg in segs:
-                sig = seg.signature(self.cfg, self.shape)
-                relevant = seg.relevant_clause_fields(self.shape.kind)
-                rel_knobs = seg.relevant_knob_fields(self.shape.kind)
-                for c in per_seg_combos[seg.name]:
-                    rid = row_cid(c, kn)
-                    if statuses.get((seg.name, rid)) in SETTLED:
-                        continue
-                    if self.validate:
-                        if c.cid not in valid_memo:
-                            valid_memo[c.cid] = \
-                                validate_combination(self.cfg, c)
-                        ok, msg = valid_memo[c.cid]
-                        if not ok:
-                            recorder.invalid(seg.name, rid, msg)
+        map_memo: Dict[Tuple[Optional[str], str, str], str] = {}
+        # per-segment invariants, computed once (not per mesh/knob point)
+        seg_memo = {seg.name: (seg.signature(self.cfg, self.shape),
+                               seg.relevant_clause_fields(self.shape.kind),
+                               seg.relevant_knob_fields(self.shape.kind))
+                    for seg in segs}
+        for mp in mpoints:
+            mmid = mp.mid if mp is not None else None
+            mesh_for_map = mp if swept_mesh else self.mesh
+            # ONE encoder for the environment column: env_key accepts a
+            # MeshSpec, so swept and fixed-mesh sweeps can never drift
+            # into differently-formatted (cache-splitting) keys
+            env = _env_key_fn(mp, self.executor) if swept_mesh \
+                else self.mesh_key
+            for kn in points:
+                gid = kn.kid
+                for seg in segs:
+                    sig, relevant, rel_knobs = seg_memo[seg.name]
+                    for c in per_seg_combos[seg.name]:
+                        rid = row_cid(c, kn, mp if swept_mesh else None)
+                        if statuses.get((seg.name, rid)) in SETTLED:
                             continue
-                    mk = map_memo.get((seg.name, c.cid))
-                    if mk is None:
-                        mk = mapping_key(self.cfg, self.mesh, c, seg)
-                        map_memo[(seg.name, c.cid)] = mk
-                    ec = effective_cid(c, relevant, mk, kn, rel_knobs)
-                    key = f"{sig}/{ec}" if self.share_scores \
-                        else f"{seg.name}/{rid}"
-                    g = work.groups.setdefault(
-                        key, JobGroup(seg, c, sig, ec, knobs=kn))
-                    g.members.append((seg.name, rid))
-                    g.scopes.add(f"{gid}/{seg.name}")
+                        if self.validate:
+                            if c.cid not in valid_memo:
+                                valid_memo[c.cid] = \
+                                    validate_combination(self.cfg, c)
+                            ok, msg = valid_memo[c.cid]
+                            if not ok:
+                                recorder.invalid(seg.name, rid, msg)
+                                continue
+                        mk = map_memo.get((mmid, seg.name, c.cid))
+                        if mk is None:
+                            mk = mapping_key(self.cfg, mesh_for_map, c, seg)
+                            map_memo[(mmid, seg.name, c.cid)] = mk
+                        ec = effective_cid(c, relevant, mk, kn, rel_knobs)
+                        key = f"{sig}/{ec}" if self.share_scores \
+                            else f"{seg.name}/{rid}"
+                        if swept_mesh:
+                            key = f"{mmid}/{key}"
+                        g = work.groups.setdefault(
+                            key, JobGroup(seg, c, sig, ec, knobs=kn,
+                                          mesh=mp if swept_mesh else None,
+                                          mesh_key=env if swept_mesh
+                                          else ""))
+                        g.members.append((seg.name, rid))
+                        scope = f"{gid}/{seg.name}"
+                        g.scopes.add(f"{mmid}/{scope}" if swept_mesh
+                                     else scope)
 
         # persistent cache stage: resolve whole groups without compiling
-        n_chips = getattr(self.executor, "n_chips", 1)
+        fixed_chips = getattr(self.executor, "n_chips", 1)
         hw = getattr(self.executor, "hw", V5E)
         for key, g in list(work.groups.items()):
+            env = g.mesh_key or work.mesh_key
             hit = self.db.cache_get(g.signature, work.shape_key,
-                                    work.mesh_key, g.eff_cid) \
+                                    env, g.eff_cid) \
                 if self.use_cache else None
             if hit is not None:
                 recorder.cache_hit(g, hit)
@@ -167,12 +207,14 @@ class Scheduler:
                             work.incumbents[scope] = t
                 del work.groups[key]
                 continue
+            n_chips = g.mesh.n_devices if g.mesh is not None else fixed_chips
             work.jobs.append(JobSpec(
                 key, g.seg, g.combo, segments=tuple(sorted(g.scopes)),
                 bound_s=combo_lower_bound(self.cfg, self.shape, g.seg,
                                           g.combo, n_chips, hw,
                                           knobs=g.knobs),
-                signature=g.signature, eff_cid=g.eff_cid, knobs=g.knobs))
+                signature=g.signature, eff_cid=g.eff_cid, knobs=g.knobs,
+                mesh=g.mesh, mesh_key=g.mesh_key))
         recorder.flush()
 
         # cheapest-bound-first: incumbents tighten early, pruning bites

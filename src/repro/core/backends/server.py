@@ -175,11 +175,20 @@ class SweepScoringServer:
         # wire data) are a 400, not a batch that 'transiently' fails on
         # every resubmit
         from repro.configs.registry import arch_from_spec, shape_from_spec
-        executor_from_spec(init["executor"], allow_test=self.allow_test)
+        executor = executor_from_spec(init["executor"],
+                                      allow_test=self.allow_test)
         arch_from_spec(init["arch"])
         shape_from_spec(init["shape"])
+        self._check_cache_tag(executor, init.get("mesh_key", ""))
         for jd in payload["jobs"]:
-            JobSpec.from_json(jd)
+            spec = JobSpec.from_json(jd)
+            if spec.mesh is not None:
+                # a MeshSpec THIS host cannot materialize is a protocol
+                # error (MeshUnsatisfiable -> HTTP 400): retrying the
+                # batch can never succeed here, and a 'transient' verdict
+                # would make clients retry it forever
+                spec.mesh.check_local()
+            self._check_cache_tag(executor, spec.mesh_key)
         bid = batch_id(payload)
         with self._lock:
             batch = self._batches.get(bid)
@@ -191,6 +200,26 @@ class SweepScoringServer:
             threading.Thread(target=self._run_batch, args=(batch,),
                              daemon=True).start()
         return bid, resumed
+
+    @staticmethod
+    def _check_cache_tag(executor, mesh_key: str):
+        """A client-derived environment column whose executor tag half
+        does not match the tag of the executor THIS server rebuilt is a
+        protocol error: scores would be measured here but banked under
+        the client's environment — e.g. a CPU client's
+        ``wallclock:r5:cpu`` column filled with this host's GPU medians,
+        served back to genuinely-CPU hosts later.  Only env-formatted
+        keys (``<mesh>/<tag>``) are checked; opaque test keys pass."""
+        tag = getattr(executor, "cache_tag", None)
+        if tag is None or "/" not in mesh_key:
+            return
+        got = mesh_key.split("/", 1)[1]
+        if got != tag:
+            raise ValueError(
+                f"cache environment tag mismatch: client banked under "
+                f"{got!r} but this server's executor scores as {tag!r} — "
+                "scores measured here must not be cached as the client's "
+                "environment")
 
     def batch(self, bid: str) -> Optional[_Batch]:
         with self._lock:
@@ -239,7 +268,10 @@ class SweepScoringServer:
                 hit = None
                 if spec.signature:
                     with self._db_lock:
-                        hit = self.db.cache_get(spec.signature, sk, mk,
+                        # mesh-axis jobs carry their own environment
+                        # column; the init mesh_key covers the rest
+                        hit = self.db.cache_get(spec.signature, sk,
+                                                spec.mesh_key or mk,
                                                 spec.eff_cid)
                 if hit is not None and hit["status"] in (DONE, FAILED):
                     with self._lock:
@@ -267,7 +299,8 @@ class SweepScoringServer:
                                 and out.status in (DONE, FAILED)):
                             puts.append({
                                 "signature": spec.signature, "shape": sk,
-                                "mesh": mk, "cid": spec.eff_cid,
+                                "mesh": spec.mesh_key or mk,
+                                "cid": spec.eff_cid,
                                 "status": out.status, "cost": out.cost,
                                 "error": out.error})
                         batch.push(out.to_json())

@@ -77,11 +77,23 @@ def mapping_key(cfg, mesh, combo: "Combination", seg) -> str:
     same mapping build the same program.  Without a mesh every mapping is a
     no-op (``Rules.constrain`` passes through, shardings are ``None``), so
     all providers collapse to one key.
+
+    ``mesh`` may be a live ``jax.Mesh`` *or* a declarative
+    :class:`~repro.core.meshspec.MeshSpec` — the mapping resolution only
+    needs axis names and sizes, never device handles, so a swept mesh
+    point is keyed without materializing anything.
     """
-    if mesh is None:
+    from repro.core.meshspec import MeshSpec
+    if isinstance(mesh, MeshSpec):
+        if mesh.is_local:
+            return "local"
+        axis_sizes = mesh.axis_sizes()
+    elif mesh is None:
         return "local"
+    else:
+        axis_sizes = dict(zip(mesh.axis_names,
+                              (int(d) for d in mesh.devices.shape)))
     from repro.core.providers import get_provider
-    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     m = get_provider(combo.provider).mapping(cfg, axis_sizes, combo.flags, seg)
     blob = json.dumps({"axes": axis_sizes,
                        "map": {k: m[k] for k in sorted(m)}},
@@ -147,18 +159,30 @@ class GlobalKnobs:
         return cls(**d)
 
 
-def row_cid(combo: "Combination", knobs: Optional[GlobalKnobs] = None) -> str:
-    """DB row id of one (combination, knob point) registration.
+def row_cid(combo: "Combination", knobs: Optional[GlobalKnobs] = None,
+            mesh=None) -> str:
+    """DB row id of one (combination, knob point, mesh point)
+    registration.
 
     The default knob point keeps the bare combination cid, so projects
     registered by the pre-knob engine resume seamlessly; any other point
     qualifies the cid with the knob content id.  Content-determined: two
     sweeps registering the same (combo, knobs) share the row regardless
     of how the knob point was specified (fixed ``knobs=`` or a
-    ``global_space`` grid)."""
-    if knobs is None or knobs == GlobalKnobs():
-        return combo.cid
-    return f"{combo.cid}@{knobs.kid}"
+    ``global_space`` grid).
+
+    ``mesh`` is the *swept* mesh point (a
+    :class:`~repro.core.meshspec.MeshSpec`) or ``None`` when the mesh is
+    not swept — fixed-mesh and pre-mesh sweeps keep their unqualified
+    ids and resume unchanged.  Every swept point qualifies the id with
+    its content key, *including* the local point (``#local``): a swept
+    row must never collide with (and silently resume as) a fixed-mesh
+    row of the same project scored under a different topology."""
+    rid = combo.cid if knobs is None or knobs == GlobalKnobs() \
+        else f"{combo.cid}@{knobs.kid}"
+    if mesh is not None:
+        rid = f"{rid}#{mesh.mid}"
+    return rid
 
 
 def swept_knob_fields(space: Optional[Dict[str, Tuple]]) -> Tuple[str, ...]:
@@ -235,9 +259,19 @@ def load_sweep_json(path: str):
     {
       "providers": {"tensor_par": ["shard_vocab"], "fsdp": []},
       "clauses":   {"remat": ["none","dots"], "kernel": ["xla"]},
-      "globals":   {"microbatches": [1,2]}
+      "globals":   {"microbatches": [1,2]},
+      "meshes":    [null, {"data": 2, "model": 2}]
     }
+
+    ``meshes`` is the topology axis: a list of mesh points passed to
+    ``sweep(mesh_space=...)``.  ``null`` is the local (meshless) point;
+    an object is either the ``{"axis": size, ...}`` shorthand or the
+    full MeshSpec wire form (``{"axes": [["data", 2]], "device_kind":
+    "cpu"}``).  Absent = the mesh is not swept (``mesh_space=None``).
+
+    Returns ``(providers, clause_space, global_space, mesh_space)``.
     """
+    from repro.core.meshspec import as_mesh_point
     with open(path) as f:
         spec = json.load(f)
     providers = list(spec.get("providers", {}))
@@ -247,4 +281,6 @@ def load_sweep_json(path: str):
     global_space = {k: tuple(v) for k, v in spec.get("globals", {}).items()}
     for k, v in DEFAULT_GLOBAL_SPACE.items():
         global_space.setdefault(k, (v[0],))
-    return providers, clause_space, global_space
+    mesh_space = [as_mesh_point(m) for m in spec["meshes"]] \
+        if "meshes" in spec else None
+    return providers, clause_space, global_space, mesh_space

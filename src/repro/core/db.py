@@ -13,6 +13,7 @@ import time
 from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.core.combinator import Combination, GlobalKnobs, row_cid
+from repro.core.meshspec import MeshSpec
 
 _SCHEMA = """
 CREATE TABLE IF NOT EXISTS projects (
@@ -129,25 +130,31 @@ class SweepDB:
         self.register_many(project, [(segment, combo)])
 
     def register_many(self, project: str, items: Iterable[Tuple]):
-        """Register (segment, combination[, knobs]) rows in ONE
+        """Register (segment, combination[, knobs[, mesh]]) rows in ONE
         transaction.
 
-        Items are ``(segment, combo)`` 2-tuples or
-        ``(segment, combo, knobs)`` 3-tuples — the knob axis.  The row id
-        is ``combinator.row_cid(combo, knobs)`` (the bare combination cid
-        for the default/absent knob point, so pre-knob projects resume
-        unchanged) and the spec records the knob point for per-knob
-        fusion grouping.
+        Items are ``(segment, combo)`` 2-tuples, ``(segment, combo,
+        knobs)`` 3-tuples — the knob axis — or ``(segment, combo, knobs,
+        mesh)`` 4-tuples — the mesh/topology axis, where ``mesh`` is the
+        swept :class:`~repro.core.meshspec.MeshSpec` point (``None`` =
+        the mesh is not swept).  The row id is
+        ``combinator.row_cid(combo, knobs, mesh)`` (the bare combination
+        cid for the default/absent points, so pre-knob and pre-mesh
+        projects resume unchanged) and the spec records the knob and
+        mesh points for per-point fusion grouping.
         """
         now = time.time()
         rows = []
         for item in items:
             seg, c = item[0], item[1]
             kn = item[2] if len(item) > 2 else None
+            mesh = item[3] if len(item) > 3 else None
             spec = c.to_json()
             if kn is not None:
                 spec["knobs"] = kn.to_json()
-            rows.append((project, seg, row_cid(c, kn),
+            if mesh is not None:
+                spec["mesh"] = mesh.to_json()
+            rows.append((project, seg, row_cid(c, kn, mesh),
                          json.dumps(spec), now))
         self.conn.executemany(
             "INSERT OR IGNORE INTO combinations "
@@ -281,6 +288,8 @@ class SweepDB:
                         "combo": Combination.from_json(sd),
                         "knobs": GlobalKnobs.from_json(sd["knobs"])
                         if sd.get("knobs") else None,
+                        "mesh": MeshSpec.from_json(sd["mesh"])
+                        if sd.get("mesh") else None,
                         "status": status,
                         "cost": json.loads(cost) if cost else None,
                         "error": error})

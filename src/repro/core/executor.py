@@ -160,6 +160,12 @@ def analyze_compiled(lowered, compiled, n_chips: int,
     return terms
 
 
+#: sentinel for "no per-job mesh override: use the executor's own mesh".
+#: Distinct from ``None`` — a swept *local* point passes ``mesh=None``
+#: explicitly to score meshless even on a fixed-mesh executor.
+_OWN_MESH = object()
+
+
 class DryRunExecutor:
     #: analytic scoring: concurrent workers don't perturb each other
     parallel_safe = True
@@ -179,7 +185,13 @@ class DryRunExecutor:
 
     def score_segment(self, cfg: ArchConfig, shape: ShapeConfig,
                       seg: Segment, combo: Combination,
-                      knobs: Optional[GlobalKnobs] = None) -> CostTerms:
+                      knobs: Optional[GlobalKnobs] = None,
+                      mesh=_OWN_MESH) -> CostTerms:
+        # ``mesh`` is the swept topology point's materialized mesh (the
+        # mesh axis: one executor scores every point of a mesh_space);
+        # left unset, the executor's fixed mesh applies
+        mesh = self.mesh if mesh is _OWN_MESH else mesh
+        n_chips = int(mesh.devices.size) if mesh is not None else 1
         # donation is part of the lowered program (buffer aliasing), so a
         # swept `donate` knob genuinely changes what is scored; safe here
         # because the dry-run path never executes the compiled artifact
@@ -188,14 +200,14 @@ class DryRunExecutor:
         with deadline(self.timeout_s):
             try:
                 fn, args, shardings = segment_program(
-                    cfg, shape, seg, combo, self.mesh, knobs=knobs)
+                    cfg, shape, seg, combo, mesh, knobs=knobs)
                 lowered, compiled = lower_and_compile(
-                    fn, args, shardings, self.mesh, donate_argnums=donate)
+                    fn, args, shardings, mesh, donate_argnums=donate)
             except CombinationFailed:
                 raise
             except Exception as e:  # sharding/lowering failure = invalid combo
                 raise CombinationFailed(f"{type(e).__name__}: {e}") from e
-        return analyze_compiled(lowered, compiled, self.n_chips, self.hw)
+        return analyze_compiled(lowered, compiled, n_chips, self.hw)
 
 
 class WallClockExecutor:
@@ -213,11 +225,18 @@ class WallClockExecutor:
 
     @property
     def cache_tag(self) -> str:
-        return f"wallclock:r{self.repeats}"
+        # empirical timings are hardware identity, so the tag embeds the
+        # local platform: two hosts sharing a score DB must never serve
+        # each other wall-clock medians measured on different silicon.
+        # (The analytic DryRunExecutor embeds its hw MODEL name instead —
+        # its scores are platform-independent by construction.)
+        return f"wallclock:r{self.repeats}:{jax.devices()[0].platform}"
 
     def score_segment(self, cfg: ArchConfig, shape: ShapeConfig,
                       seg: Segment, combo: Combination,
-                      knobs: Optional[GlobalKnobs] = None) -> CostTerms:
+                      knobs: Optional[GlobalKnobs] = None,
+                      mesh=_OWN_MESH) -> CostTerms:
+        mesh = self.mesh if mesh is _OWN_MESH else mesh
         # NOTE: no buffer donation here — the timing loop re-calls the
         # compiled program with the same concrete buffers, and donated
         # arrays are deleted after the first call.  A swept `donate`
@@ -227,12 +246,12 @@ class WallClockExecutor:
         with deadline(self.timeout_s):
             try:
                 fn, args, shardings = segment_program(
-                    cfg, shape, seg, combo, self.mesh, knobs=knobs)
+                    cfg, shape, seg, combo, mesh, knobs=knobs)
                 concrete = jax.tree.map(
                     lambda s: _materialize(s), args,
                     is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
                 lowered, compiled = lower_and_compile(
-                    fn, concrete, shardings, self.mesh)
+                    fn, concrete, shardings, mesh)
                 out = compiled(*concrete)
                 jax.block_until_ready(out)
                 times = []
@@ -271,7 +290,8 @@ class SleepExecutor:
 
     def score_segment(self, cfg: ArchConfig, shape: ShapeConfig,
                       seg: Segment, combo: Combination,
-                      knobs: Optional[GlobalKnobs] = None) -> CostTerms:
+                      knobs: Optional[GlobalKnobs] = None,
+                      mesh=None) -> CostTerms:
         time.sleep(self.sleep_s)
         return CostTerms(compute_s=self.sleep_s)
 
@@ -293,7 +313,8 @@ class CrashExecutor:
 
     def score_segment(self, cfg: ArchConfig, shape: ShapeConfig,
                       seg: Segment, combo: Combination,
-                      knobs: Optional[GlobalKnobs] = None) -> CostTerms:
+                      knobs: Optional[GlobalKnobs] = None,
+                      mesh=None) -> CostTerms:
         import os
         os._exit(13)
 
@@ -359,9 +380,23 @@ class ParallelSweepRunner:
             return JobResult(job, "pruned",
                              error=f"lower bound {job.bound_s:.3e}s > "
                                    f"incumbent best")
+        kw = {}
+        if job.mesh is not None:
+            # a swept mesh point: materialize it (memoized per process —
+            # many jobs share a point) and build under it instead of the
+            # executor's own mesh.  Only passed when present, so
+            # hand-built executors without the parameter stay usable.
+            from repro.core.meshspec import MeshUnsatisfiable, cached_mesh
+            try:
+                kw["mesh"] = cached_mesh(job.mesh)
+            except MeshUnsatisfiable as e:
+                # environment-dependent, not a verdict on the combination:
+                # another host (or a bigger device count) may satisfy it
+                return JobResult(job, "failed", error=str(e), transient=True)
         try:
             cost = self.executor.score_segment(
-                self.cfg, self.shape, job.seg, job.combo, knobs=job.knobs)
+                self.cfg, self.shape, job.seg, job.combo, knobs=job.knobs,
+                **kw)
         except CombinationFailed as e:
             return JobResult(job, "failed", error=str(e),
                              transient=getattr(e, "transient", False))
@@ -386,8 +421,9 @@ class ParallelSweepRunner:
         for job in jobs:
             if job.bound_s <= 0.0:      # Scheduler-built jobs arrive bounded
                 job.bound_s = combo_lower_bound(
-                    self.cfg, self.shape, job.seg, job.combo, n_chips, hw,
-                    knobs=job.knobs)
+                    self.cfg, self.shape, job.seg, job.combo,
+                    job.mesh.n_devices if job.mesh is not None else n_chips,
+                    hw, knobs=job.knobs)
         ordered = sorted(jobs, key=lambda j: (j.bound_s, j.key))
 
         if self.workers == 1:

@@ -19,6 +19,7 @@ the returned plan's ``knobs`` are chosen, not supplied.
 """
 from __future__ import annotations
 
+import logging
 import math
 from typing import Dict, List, Optional, Tuple
 
@@ -32,6 +33,8 @@ from repro.core.plan import Plan
 from repro.core.providers import get_provider
 from repro.core.segment import Segment, fragment
 from repro.runtime.sharding import Rules
+
+log = logging.getLogger("repro.fusion")
 
 
 def _residual_pspec(cfg: ArchConfig, shape: ShapeConfig, mesh,
@@ -134,8 +137,9 @@ def fuse_joint(cfg: ArchConfig, shape: ShapeConfig, mesh,
                per_knob: Dict[str, Dict[str, List[Tuple[Combination,
                                                         CostTerms]]]],
                knob_points: List[GlobalKnobs], *,
-               boundary_costs: bool = False, hw: Hardware = V5E) -> Plan:
-    """Joint argmin over ``(segment, combination, knobs)``.
+               boundary_costs: bool = False, hw: Hardware = V5E,
+               mesh_points=None) -> Plan:
+    """Joint argmin over ``(segment, combination, knobs[, mesh])``.
 
     ``per_knob``: knob kid -> (segment name -> valid [(combo, cost)]).
     Solves each knob point's chain with :func:`fuse` (per-segment argmin,
@@ -145,8 +149,55 @@ def fuse_joint(cfg: ArchConfig, shape: ShapeConfig, mesh,
     backends.  A knob point missing a valid combination for some segment
     is skipped; if *every* point is unfusable the error lists each
     point's failure.
+
+    With ``mesh_points`` (a list of
+    :class:`~repro.core.meshspec.MeshSpec`) the mesh becomes the
+    *outermost* axis: ``per_knob`` is then keyed ``mesh mid -> knob kid
+    -> segment -> rows``, ``mesh`` (the fixed-mesh argument) is ignored,
+    and each point's inner (knob x segment) solve runs under that
+    point's own topology — materialized only when ``boundary_costs``
+    needs a live mesh, since the boundary resharding penalty is exactly
+    what makes plans *differ* across topologies.  The winning plan's
+    ``plan.mesh`` is the CHOSEN point; ties break to the earliest point
+    in ``mesh_points`` order.
     """
-    best: Optional[Plan] = None
+    if mesh_points is not None:
+        best: Optional[Plan] = None
+        mesh_totals: Dict[str, float] = {}
+        failures = []
+        for mp in mesh_points:
+            table = per_knob.get(mp.mid) or {}
+            try:
+                # a live mesh is only needed to price boundary
+                # reshardings; the per-segment argmin is mesh-blind
+                live = mp.to_mesh() if boundary_costs else None
+                plan = fuse_joint(cfg, shape, live, table, knob_points,
+                                  boundary_costs=boundary_costs, hw=hw)
+            except ValueError as e:
+                failures.append(f"[{mp.key()}] {e}")
+                continue
+            plan.mesh = mp
+            mesh_totals[mp.key()] = plan.meta["predicted_total_s"]
+            if best is None or (plan.meta["predicted_total_s"]
+                                < best.meta["predicted_total_s"]):
+                best = plan
+        if best is None:
+            raise ValueError("no mesh point is fusable: "
+                             + "; ".join(failures))
+        if failures:
+            # a dropped point shrinks the argmin silently otherwise —
+            # e.g. boundary_costs needing a mesh THIS host can't build
+            # even though a remote server scored it fine
+            log.warning("mesh argmin skipped %d point(s): %s",
+                        len(failures), "; ".join(failures))
+            best.meta["mesh_failures"] = list(failures)
+        if len(mesh_points) > 1:
+            best.meta["fusion"] += "+mesh-argmin"
+        best.meta["mesh_points"] = len(mesh_points)
+        best.meta["per_mesh_total_s"] = mesh_totals
+        return best
+
+    best = None
     totals: Dict[str, float] = {}
     failures = []
     for kn in knob_points:

@@ -13,6 +13,7 @@ from typing import Dict, Optional
 
 from repro.configs.base import ArchConfig
 from repro.core.combinator import Combination, GlobalKnobs
+from repro.core.meshspec import MeshSpec
 from repro.core.providers import get_provider
 from repro.core.segment import Segment, fragment
 from repro.models.context import ModelContext, SegmentClause
@@ -26,16 +27,24 @@ class Plan:
     segments: Dict[str, Combination]
     knobs: GlobalKnobs = field(default_factory=GlobalKnobs)
     meta: Dict[str, object] = field(default_factory=dict)
+    #: the mesh/topology point the plan was fused for.  ``None`` =
+    #: unswept (pre-mesh plans load unchanged); set by ``fuse_joint``
+    #: when a ``mesh_space`` was swept — the CHOSEN topology, the mesh
+    #: analogue of ``knobs``.
+    mesh: Optional[MeshSpec] = None
 
     def to_json(self) -> Dict:
         return {"segments": {k: c.to_json() for k, c in self.segments.items()},
-                "knobs": vars(self.knobs), "meta": self.meta}
+                "knobs": vars(self.knobs), "meta": self.meta,
+                "mesh": self.mesh.to_json() if self.mesh is not None
+                else None}
 
     @classmethod
     def from_json(cls, d: Dict) -> "Plan":
         return cls({k: Combination.from_json(v)
                     for k, v in d["segments"].items()},
-                   GlobalKnobs(**d["knobs"]), d.get("meta", {}))
+                   GlobalKnobs(**d["knobs"]), d.get("meta", {}),
+                   MeshSpec.from_json(d["mesh"]) if d.get("mesh") else None)
 
     def save(self, path: str):
         with open(path, "w") as f:
@@ -48,6 +57,8 @@ class Plan:
 
     def describe(self) -> str:
         lines = [f"knobs: {self.knobs.key()}"]
+        if self.mesh is not None:
+            lines.insert(0, f"mesh: {self.mesh.key()}")
         for seg, c in sorted(self.segments.items()):
             lines.append(f"  {seg:8s} -> {c.label()}")
         return "\n".join(lines)

@@ -45,6 +45,7 @@ from repro.core.db import SweepDB
 from repro.core.executor import (DryRunExecutor, ParallelSweepRunner,  # noqa: F401  (ParallelSweepRunner re-exported for spies/back-compat)
                                  SweepJob, WallClockExecutor)
 from repro.core.fusion import best_uniform, fuse, fuse_joint  # noqa: F401  (fuse re-exported)
+from repro.core.meshspec import MeshSpec, as_mesh_point, cached_mesh
 from repro.core.plan import Plan
 from repro.core.providers import all_providers, get_provider
 from repro.core.segment import Segment, fragment
@@ -65,16 +66,21 @@ class SweepReport:
     n_shared: int = 0       # rows that shared an in-run compiled score
     n_transient: int = 0    # rows failed by deadline/crash (retryable)
     n_knob_points: int = 1  # GlobalKnobs points swept (the RTL axis)
+    n_mesh_points: int = 1  # mesh/topology points swept (the mesh axis)
     paper_count: int = 0    # the paper's formula, an upper bound
     elapsed_s: float = 0.0
-    #: the winning knob point's per-segment valid rows
+    #: the winning (mesh, knob) point's per-segment valid rows
     per_segment: Dict[str, List[Tuple[Combination, CostTerms]]] = \
         field(default_factory=dict)
     #: knobs.key() -> fused predicted total, every fusable knob point
+    #: (of the winning mesh point, when the mesh is swept)
     per_knob_total_s: Dict[str, float] = field(default_factory=dict)
+    #: mesh.key() -> fused predicted total, every fusable mesh point
+    per_mesh_total_s: Dict[str, float] = field(default_factory=dict)
 
     def summary(self) -> str:
         return (f"project={self.project} knob_points={self.n_knob_points} "
+                f"mesh_points={self.n_mesh_points} "
                 f"done={self.n_done} failed={self.n_failed} "
                 f"invalid={self.n_invalid} pruned={self.n_pruned} "
                 f"scored={self.n_scored} cached={self.n_cached} "
@@ -91,7 +97,9 @@ class ComParTuner:
                  validate: bool = False, timeout_s: Optional[int] = 300):
         self.cfg = cfg
         self.shape = shape
-        self.mesh = mesh
+        # a declarative MeshSpec is accepted wherever a live mesh is:
+        # materialized here once against local devices
+        self.mesh = cached_mesh(mesh) if isinstance(mesh, MeshSpec) else mesh
         self.db = db or SweepDB(":memory:")
         name = project or f"{cfg.name}-{shape.name}"
         self.project = self.db.open_project(
@@ -111,6 +119,7 @@ class ComParTuner:
               clause_space=None, *, budget: Optional[int] = None,
               knobs: GlobalKnobs = GlobalKnobs(),
               global_space: Optional[Dict[str, Tuple]] = None,
+              mesh_space: Optional[Sequence] = None,
               boundary_costs: bool = False,
               max_flags: Optional[int] = None,
               backend: str = "thread",
@@ -130,6 +139,16 @@ class ComParTuner:
                           point (the ``knobs`` argument, which is
                           otherwise ignored).  The grid is not
                           ``budget``-sampled.
+        ``mesh_space``    mesh/topology points swept as a second outer
+                          axis: a list of ``MeshSpec`` | ``None`` (the
+                          local point) | ``{"axis": size}`` dicts | live
+                          meshes.  The returned ``plan.mesh`` is CHOSEN
+                          by the joint argmin over
+                          (segment, combination, knobs, mesh).  Default
+                          ``None`` = the mesh is not swept (the
+                          constructor's fixed mesh applies); when given,
+                          the constructor mesh is *not* implicitly a
+                          point — list it if you want it raced.
         ``backend``       scoring backend: ``thread`` (default) |
                           ``sequential`` | ``process`` | ``remote``
         ``workers``       workers scoring unique programs (threads or
@@ -150,6 +169,22 @@ class ComParTuner:
         t0 = time.time()
         points = global_grid(global_space) if global_space is not None \
             else [knobs]
+        mesh_swept = mesh_space is not None
+        mpoints: Optional[List[MeshSpec]] = None
+        if mesh_swept:
+            # normalize + dedupe by content: the same topology listed
+            # twice would register colliding rows and double-count points
+            mpoints, seen = [], set()
+            for m in mesh_space:
+                mp = as_mesh_point(m)
+                if mp.mid not in seen:
+                    seen.add(mp.mid)
+                    mpoints.append(mp)
+            if not mpoints:
+                raise ValueError("mesh_space is empty")
+            if self.mesh is not None:
+                log.info("mesh_space sweeps its own points; the fixed "
+                         "constructor mesh is not implicitly included")
         if prune and boundary_costs:
             # the lower-bound certificate covers the per-segment argmin
             # only; under Viterbi fusion a locally-dominated combination
@@ -162,13 +197,6 @@ class ComParTuner:
         if backend == "remote" and not remote_url:
             raise ValueError("backend='remote' needs remote_url "
                              "(the sweep scoring server URL)")
-        if backend in ("process", "remote") and self.mesh is not None:
-            # the wire format reconstructs arch/shape in the worker;
-            # meshes (device handles) don't serialize
-            log.warning("%s backend needs a serializable job spec; "
-                        "meshed sweeps fall back to the thread backend",
-                        backend)
-            backend, remote_url = "thread", None
         if workers > 1 and not getattr(self.executor, "parallel_safe", True):
             log.warning("workers=%d -> 1: %s timings would contend on the "
                         "device", workers, type(self.executor).__name__)
@@ -186,6 +214,7 @@ class ComParTuner:
                                         budget=budget, max_flags=max_flags)
         rep = SweepReport(
             self.project, n_combinations=0, n_knob_points=len(points),
+            n_mesh_points=len(mpoints) if mesh_swept else 1,
             paper_count=paper_combination_count(
                 [len(get_provider(p).flags) for p in providers],
                 # charge the formula's rtl term for what is actually
@@ -193,50 +222,67 @@ class ComParTuner:
                 n_rtl=len(swept_knob_fields(global_space)),
                 n_d=len(clause_space or {}) or 6))
 
-        # Combinator: register every (segment, combination, knob point),
-        # one transaction
+        # Combinator: register every (segment, combination, knob point,
+        # mesh point), one transaction.  Unswept mesh = None (bare row
+        # ids: pre-mesh projects resume unchanged).
         per_seg_combos: Dict[str, List[Combination]] = {}
         for seg in segs:
             per_seg_combos[seg.name] = [
                 c for c in combos
                 if get_provider(c.provider).applicable(self.cfg, seg)]
-        reg: List[Tuple[str, Combination, GlobalKnobs]] = []
-        for kn in points:
-            for seg in segs:
-                reg.extend((seg.name, c, kn)
-                           for c in per_seg_combos[seg.name])
+        reg: List[Tuple] = []
+        for mp in (mpoints if mesh_swept else [None]):
+            for kn in points:
+                for seg in segs:
+                    reg.extend((seg.name, c, kn, mp)
+                               for c in per_seg_combos[seg.name])
         rep.n_combinations = len(reg)
         self.db.register_many(self.project, reg)
 
         self._execute(segs, per_seg_combos, points, rep,
+                      mesh_points=mpoints,
                       backend=backend, workers=workers,
                       remote_url=remote_url, prune=prune,
                       prune_margin=prune_margin, use_cache=use_cache,
                       share_scores=share_scores, record_batch=record_batch)
 
-        # collect valid results per (knob point, segment)
+        # collect valid results per (mesh point, knob point, segment)
         by_rid = {(r["segment"], r["cid"]): r
                   for r in self.db.results(self.project)}
-        per_knob: Dict[str, Dict[str, List[Tuple[Combination, CostTerms]]]] \
-            = {}
-        for kn in points:
-            table = per_knob.setdefault(kn.kid, {})
-            for seg in segs:
-                good = table.setdefault(seg.name, [])
-                for c in per_seg_combos[seg.name]:
-                    r = by_rid.get((seg.name, row_cid(c, kn)))
-                    if r is not None and r["status"] == "done" and r["cost"]:
-                        good.append((c, CostTerms.from_dict(r["cost"])))
+
+        def knob_table(mp):
+            per_knob: Dict[str, Dict[str, List[Tuple[Combination,
+                                                     CostTerms]]]] = {}
+            for kn in points:
+                table = per_knob.setdefault(kn.kid, {})
+                for seg in segs:
+                    good = table.setdefault(seg.name, [])
+                    for c in per_seg_combos[seg.name]:
+                        r = by_rid.get((seg.name, row_cid(c, kn, mp)))
+                        if r is not None and r["status"] == "done" \
+                                and r["cost"]:
+                            good.append((c, CostTerms.from_dict(r["cost"])))
+            return per_knob
+
         counts = self.db.done_count(self.project)
         rep.n_done = counts.get("done", 0)
         rep.n_failed = counts.get("failed", 0)
         rep.n_invalid = counts.get("invalid", 0)
         rep.n_pruned = counts.get("pruned", 0)
 
-        plan = fuse_joint(self.cfg, self.shape, self.mesh, per_knob,
-                          points, boundary_costs=boundary_costs)
+        if mesh_swept:
+            per_mesh = {mp.mid: knob_table(mp) for mp in mpoints}
+            plan = fuse_joint(self.cfg, self.shape, None, per_mesh, points,
+                              boundary_costs=boundary_costs,
+                              mesh_points=mpoints)
+            rep.per_segment = per_mesh[plan.mesh.mid][plan.knobs.kid]
+            rep.per_mesh_total_s = dict(plan.meta["per_mesh_total_s"])
+        else:
+            per_knob = knob_table(None)
+            plan = fuse_joint(self.cfg, self.shape, self.mesh, per_knob,
+                              points, boundary_costs=boundary_costs)
+            rep.per_segment = per_knob[plan.knobs.kid]
         plan.meta["project"] = self.project
-        rep.per_segment = per_knob[plan.knobs.kid]
         rep.per_knob_total_s = dict(plan.meta["per_knob_total_s"])
         rep.elapsed_s = time.time() - t0
         log.info(rep.summary())
@@ -246,7 +292,9 @@ class ComParTuner:
     def _execute(self, segs: Sequence[Segment],
                  per_seg_combos: Dict[str, List[Combination]],
                  knob_points: Sequence[GlobalKnobs],
-                 rep: SweepReport, *, backend: str, workers: int,
+                 rep: SweepReport, *,
+                 mesh_points: Optional[Sequence[MeshSpec]],
+                 backend: str, workers: int,
                  remote_url: Optional[str], prune: bool,
                  prune_margin: float, use_cache: bool,
                  share_scores: bool, record_batch: int):
@@ -254,7 +302,8 @@ class ComParTuner:
         Scheduler -> ScoringBackend -> Recorder."""
         from repro.core.backends import env_key, shape_key
         # ONE key pair for the whole pipeline: the Recorder writes cache
-        # entries and the workers read them under the same sk/mk
+        # entries and the workers read them under the same sk/mk.  A
+        # swept mesh point overrides mk per job (JobSpec.mesh_key).
         sk, mk = shape_key(self.shape), env_key(self.mesh, self.executor)
         scheduler = Scheduler(
             self.db, self.project, self.cfg, self.shape, self.mesh,
@@ -265,7 +314,8 @@ class ComParTuner:
             self.db, self.project, rep, shape_key=sk, mesh_key=mk,
             use_cache=use_cache, batch=record_batch)
         work = scheduler.build(segs, per_seg_combos, recorder,
-                               knob_points=knob_points)
+                               knob_points=knob_points,
+                               mesh_points=mesh_points)
 
         engine, transient_engine = self._engine(
             backend, workers=workers, remote_url=remote_url, prune=prune,
@@ -357,23 +407,32 @@ class ComParTuner:
         With ``global_space`` the baseline is per provider the best
         uniform plan over *any* swept knob point — the fair comparison
         against a joint-argmin fused plan.  Rows recorded by the pre-knob
-        engine (no knob spec) count as the default point."""
+        engine (no knob spec) count as the default point.  Rows from a
+        swept ``mesh_space`` are grouped per mesh point (a uniform plan
+        must live on ONE topology — mixing points across segments is not
+        a realizable plan), and the baseline is the best over any
+        point."""
         points = global_grid(global_space) if global_space is not None \
             else [knobs]
+        kids = {kn.kid: kn for kn in points}
         segs = fragment(self.cfg)
-        by_gid: Dict[str, Dict[str, List[Tuple[Combination, CostTerms]]]] \
-            = {}
+        #: (mesh mid or "", knob kid) -> segment -> rows
+        by_gid: Dict[Tuple[str, str],
+                     Dict[str, List[Tuple[Combination, CostTerms]]]] = {}
         for r in self.db.results(self.project):
             if r["status"] != "done" or not r["cost"]:
                 continue
-            gid = (r["knobs"] or GlobalKnobs()).kid
+            gid = (r["mesh"].mid if r["mesh"] is not None else "",
+                   (r["knobs"] or GlobalKnobs()).kid)
             by_gid.setdefault(gid, {}).setdefault(r["segment"], []).append(
                 (r["combo"], CostTerms.from_dict(r["cost"])))
         out = {}
         for pname in all_providers():
             best = None
-            for kn in points:
-                rows = by_gid.get(kn.kid) or {}
+            for (_, kid), rows in by_gid.items():
+                kn = kids.get(kid)
+                if kn is None:
+                    continue
                 per_seg = {s.name: [(c, t) for c, t in rows.get(s.name, [])
                                     if c.provider == pname] for s in segs}
                 if not all(per_seg.values()):

@@ -1,0 +1,443 @@
+"""The mesh/topology axis: MeshSpec wire format + mesh_space sweeps.
+
+Invariants: a MeshSpec round-trips through JSON and materializes against
+local devices; a worker-rebuilt mesh scores byte-identical costs to the
+parent-built mesh; the scoring server rejects unsatisfiable meshes with
+HTTP 400 (a protocol error, never a retried transient); a
+``sweep(mesh_space=[...])`` registers per-point rows, chooses the plan's
+mesh by joint argmin, shares cache rows with repeat (and fixed-mesh)
+sweeps, and fuses byte-identically across sequential/process/remote
+backends — the meshed-sweep thread-backend fallback is gone.
+
+Multi-device cases skip below their device requirement; CI runs them
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+(the ``mesh-axis`` job).
+"""
+import json
+import urllib.error
+import urllib.request
+
+import jax
+import pytest
+
+from repro.configs import get_arch, get_shape
+from repro.core import ComParTuner, SweepDB
+from repro.core.backends import JobSpec, env_key, mesh_key
+from repro.core.combinator import Combination, GlobalKnobs, row_cid
+from repro.core.executor import DryRunExecutor
+from repro.core.meshspec import (LOCAL, MeshSpec, MeshUnsatisfiable,
+                                 as_mesh_point, cached_mesh)
+from repro.core.segment import Segment, fragment
+from repro.models.context import SegmentClause
+
+N_DEV = len(jax.devices())
+
+SPACE = {"remat": ("none", "full"), "kernel": ("xla",), "block_q": (16,),
+         "block_k": (16,), "scan_unroll": (1,), "mlstm_chunk": (16,)}
+
+
+def _plan_bytes(plan):
+    """Byte-identity of the fused decisions: segments, knobs AND the
+    chosen mesh point."""
+    d = plan.to_json()
+    return json.dumps({"segments": d["segments"], "knobs": d["knobs"],
+                       "mesh": d["mesh"]}, sort_keys=True).encode()
+
+
+def _tuner(db, project, mesh=None, mode="new"):
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    return ComParTuner(cfg, shape, mesh=mesh, db=db, project=project,
+                       mode=mode, executor="dryrun", timeout_s=120)
+
+
+def _sweep(tuner, **kw):
+    kw.setdefault("use_cache", False)
+    return tuner.sweep(providers=["tensor_par", "fsdp"], clause_space=SPACE,
+                       max_flags=1, **kw)
+
+
+# --- the MeshSpec wire format ------------------------------------------------
+
+
+def test_meshspec_roundtrip_and_content_keys():
+    spec = MeshSpec.of(data=2, model=2, device_kind="cpu")
+    wire = json.loads(json.dumps(spec.to_json()))
+    assert wire == {"axes": [["data", 2], ["model", 2]],
+                    "device_kind": "cpu"}
+    assert MeshSpec.from_json(wire) == spec
+    assert spec.n_devices == 4 and spec.axis_names == ("data", "model")
+    assert spec.key() == "data2xmodel2[cpu]"
+    # content id: stable, axis-ORDER-sensitive (mesh shape is ordered),
+    # device-kind-sensitive
+    assert spec.mid == MeshSpec.of(data=2, model=2, device_kind="cpu").mid
+    assert spec.mid != MeshSpec.of(model=2, data=2, device_kind="cpu").mid
+    assert spec.mid != MeshSpec.of(data=2, model=2).mid
+    # the local point
+    assert LOCAL.is_local and LOCAL.mid == "local" and LOCAL.to_mesh() is None
+    assert MeshSpec.from_json(json.loads(json.dumps(LOCAL.to_json()))) == LOCAL
+
+
+def test_as_mesh_point_coercions():
+    assert as_mesh_point(None) == LOCAL
+    assert as_mesh_point({"data": 2}) == MeshSpec.of(data=2)
+    assert as_mesh_point({"axes": [["data", 2]], "device_kind": "cpu"}) \
+        == MeshSpec.of(data=2, device_kind="cpu")
+    live = MeshSpec.of(data=1).to_mesh()
+    # live meshes derive an unconstrained spec: the same topology hashes
+    # the same whether it arrived live or declarative (cache sharing)
+    assert as_mesh_point(live) == MeshSpec.of(data=1)
+    with pytest.raises(TypeError):
+        as_mesh_point("data=2")
+
+
+def test_meshspec_materializes_and_rejects_oversized():
+    mesh = MeshSpec.of(data=1).to_mesh()
+    assert tuple(mesh.axis_names) == ("data",) and mesh.devices.size == 1
+    # memoized materialization returns one mesh per content key
+    assert cached_mesh(MeshSpec.of(data=1)) is cached_mesh(MeshSpec.of(data=1))
+    huge = MeshSpec.of(data=1 << 20)
+    with pytest.raises(MeshUnsatisfiable, match="device"):
+        huge.check_local()
+    with pytest.raises(MeshUnsatisfiable):
+        huge.to_mesh()
+    with pytest.raises(MeshUnsatisfiable, match="'tpu'"):
+        MeshSpec.of(data=1, device_kind="tpu").to_mesh()  # CPU container
+
+
+def test_mesh_key_is_content_determined_and_versioned():
+    """A live mesh and its spec produce the SAME cache key (fixed-mesh
+    and mesh-axis sweeps share score_cache rows), and the key format is
+    versioned — it can never collide with the pre-spec hash, which keyed
+    a different blob layout."""
+    import hashlib
+    spec = MeshSpec.of(data=1)
+    live = spec.to_mesh()
+    assert mesh_key(None) == "local"
+    assert mesh_key(LOCAL) == "local"
+    assert mesh_key(live) == spec.mid
+    assert mesh_key(spec) == spec.mid
+    # the pre-MeshSpec (v1) key of the same live mesh
+    dev = live.devices.flat[0]
+    v1_blob = json.dumps({"axes": list(live.axis_names),
+                          "shape": [int(d) for d in live.devices.shape],
+                          "platform": str(getattr(dev, "platform", "?"))})
+    v1 = hashlib.sha1(v1_blob.encode()).hexdigest()[:12]
+    assert mesh_key(live) != v1
+    ex = DryRunExecutor(None, timeout_s=60)
+    assert env_key(live, ex) == f"{mesh_key(live)}/dryrun:tpu-v5e"
+
+
+def test_jobspec_carries_meshspec_roundtrip():
+    """The satellite wire contract: a JobSpec carrying a MeshSpec (and
+    its cache environment column) survives JSON both ways."""
+    seg = Segment("g0", "stack", ("attn",), 2)
+    combo = Combination("fsdp", frozenset(), SegmentClause())
+    spec = JobSpec("k", seg, combo, segments=("m1/kid/g0",), bound_s=1.0,
+                   signature="sig", eff_cid="ec",
+                   knobs=GlobalKnobs(microbatches=2),
+                   mesh=MeshSpec.of(data=2, device_kind="cpu"),
+                   mesh_key="abc123/dryrun:tpu-v5e")
+    back = JobSpec.from_json(json.loads(json.dumps(spec.to_json())))
+    assert back == spec
+    assert back.mesh == spec.mesh and back.mesh_key == spec.mesh_key
+    # meshless jobs stay meshless (pre-mesh payloads decode unchanged)
+    bare = JobSpec("k2", seg, combo)
+    wire = json.loads(json.dumps(bare.to_json()))
+    assert JobSpec.from_json(wire).mesh is None
+    assert JobSpec.from_json(wire).mesh_key == ""
+
+
+def test_row_cid_mesh_qualified():
+    combo = Combination("fsdp", frozenset(), SegmentClause())
+    kn = GlobalKnobs(microbatches=2)
+    spec = MeshSpec.of(data=2)
+    assert row_cid(combo) == combo.cid                     # pre-mesh rows
+    assert row_cid(combo, kn) == f"{combo.cid}@{kn.kid}"
+    assert row_cid(combo, None, spec) == f"{combo.cid}#{spec.mid}"
+    assert row_cid(combo, kn, spec) == f"{combo.cid}@{kn.kid}#{spec.mid}"
+    # the swept LOCAL point is qualified too: it must never resume a
+    # fixed-mesh row of the same project as its own
+    assert row_cid(combo, None, LOCAL) == f"{combo.cid}#local"
+
+
+# --- worker-rebuilt meshes ---------------------------------------------------
+
+
+def test_worker_rebuilt_mesh_scores_byte_identical():
+    """The satellite contract: a process worker that rebuilds the mesh
+    from the JobSpec's MeshSpec scores the program byte-identical to the
+    parent scoring under its own locally-built mesh."""
+    from repro.core.backends import ProcessBackend
+
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    seg = next(s for s in fragment(cfg) if s.kind == "stack")
+    combo = Combination("fsdp", frozenset(), SegmentClause())
+    spec = MeshSpec.of(data=1)
+
+    parent_cost = DryRunExecutor(None, timeout_s=120).score_segment(
+        cfg, shape, seg, combo, mesh=spec.to_mesh())
+
+    backend = ProcessBackend(DryRunExecutor(None, timeout_s=120), cfg,
+                             shape, workers=1, timeout_s=120)
+    try:
+        outs = list(backend.run([JobSpec(
+            "j", seg, combo, segments=(seg.name,), mesh=spec)]))
+    finally:
+        backend.close()
+    assert len(outs) == 1 and outs[0].status == "done"
+    assert json.dumps(outs[0].cost, sort_keys=True) == \
+        json.dumps(parent_cost.as_dict(), sort_keys=True)
+
+
+def test_unsatisfiable_job_mesh_fails_transient_not_cached():
+    """In a worker (past submit validation), a mesh the host cannot
+    build is an environment problem, not a verdict on the combination:
+    transient, so retryable elsewhere and never cached."""
+    from repro.core.backends import ThreadBackend
+
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    seg = next(s for s in fragment(cfg) if s.kind == "stack")
+    combo = Combination("fsdp", frozenset(), SegmentClause())
+    backend = ThreadBackend(DryRunExecutor(None, timeout_s=60), cfg, shape)
+    outs = list(backend.run([JobSpec(
+        "j", seg, combo, segments=(seg.name,),
+        mesh=MeshSpec.of(data=1 << 20))]))
+    assert len(outs) == 1
+    assert outs[0].status == "failed" and outs[0].transient
+    assert "device" in outs[0].error
+
+
+def test_server_rejects_unsatisfiable_mesh_http_400(tmp_path):
+    """The satellite contract: a MeshSpec larger than the server host's
+    device count is a protocol error — HTTP 400 at submit, NOT a
+    transiently-failing batch the client would retry forever."""
+    from repro.configs import arch_to_spec, shape_to_spec
+    from repro.core.backends import WIRE_VERSION, executor_to_spec
+    from repro.core.backends.server import SweepScoringServer
+
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    seg = next(s for s in fragment(cfg) if s.kind == "stack")
+    combo = Combination("fsdp", frozenset(), SegmentClause())
+    init = {"executor": executor_to_spec(DryRunExecutor(None, timeout_s=60)),
+            "arch": arch_to_spec(cfg), "shape": shape_to_spec(shape),
+            "shape_key": "sk", "mesh_key": "mk"}
+
+    def post(url, payload):
+        req = urllib.request.Request(
+            url + "/v1/submit", data=json.dumps(payload).encode(),
+            headers={"Content-Type": "application/json"})
+        with urllib.request.urlopen(req, timeout=10) as r:
+            return json.loads(r.read())
+
+    srv = SweepScoringServer(str(tmp_path / "srv.db"), workers=1)
+    srv.start()
+    try:
+        # an oversized mesh on a JOB is rejected at submit
+        bad_job = JobSpec("j", seg, combo, segments=(seg.name,),
+                          mesh=MeshSpec.of(data=1 << 20)).to_json()
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            post(srv.url, {"v": WIRE_VERSION, "run": "n", "init": init,
+                           "jobs": [bad_job]})
+        assert ei.value.code == 400
+        assert "device" in ei.value.read().decode()
+        # an oversized mesh on the INIT EXECUTOR is rejected too
+        huge_exec = dict(init["executor"],
+                         mesh=MeshSpec.of(data=1 << 20).to_json())
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            post(srv.url, {"v": WIRE_VERSION, "run": "n",
+                           "init": {**init, "executor": huge_exec},
+                           "jobs": []})
+        assert ei.value.code == 400
+        # an env-formatted cache column whose executor-tag half doesn't
+        # match the server's rebuilt executor is a protocol error too:
+        # scores measured HERE must never be banked as the client's
+        # (different) environment
+        mismatch = {**init, "mesh_key": "local/wallclock:r5:tpu"}
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            post(srv.url, {"v": WIRE_VERSION, "run": "n",
+                           "init": mismatch, "jobs": []})
+        assert ei.value.code == 400
+        assert "tag mismatch" in ei.value.read().decode()
+        # a satisfiable meshed job is accepted
+        ok = JobSpec("j2", seg, combo, segments=(seg.name,),
+                     mesh=MeshSpec.of(data=1)).to_json()
+        resp = post(srv.url, {"v": WIRE_VERSION, "run": "n", "init": init,
+                              "jobs": [ok]})
+        assert "batch" in resp
+    finally:
+        srv.close()
+
+
+# --- the mesh axis as a swept dimension --------------------------------------
+
+
+def test_mesh_axis_sweep_registers_per_point_rows_and_chooses_mesh():
+    """mesh_space=[local, data1]: one row set per point, the plan's mesh
+    chosen by the joint argmin, per-point fused totals reported."""
+    tuner = _tuner(SweepDB(":memory:"), "axis")
+    plan, rep = _sweep(tuner, mesh_space=[None, {"data": 1}])
+    ref_plan, ref_rep = _sweep(_tuner(SweepDB(":memory:"), "ref"))
+    assert rep.n_mesh_points == 2
+    assert rep.n_combinations == 2 * ref_rep.n_combinations
+    assert rep.n_done == rep.n_combinations
+    assert plan.mesh is not None
+    assert len(rep.per_mesh_total_s) == 2
+    assert set(rep.per_mesh_total_s) == {"local", "data1[any]"}
+    # the chosen point's total is the min (ties -> earliest point)
+    assert plan.meta["predicted_total_s"] == min(rep.per_mesh_total_s.values())
+    assert plan.meta["fusion"].endswith("+mesh-argmin")
+    # ComPar's guarantee survives the mesh axis: the fused plan beats or
+    # equals every single-provider uniform baseline, where baselines are
+    # grouped per mesh point (a uniform plan lives on ONE topology)
+    baselines = tuner.baselines()
+    assert baselines
+    assert plan.meta["predicted_total_s"] <= min(baselines.values()) + 1e-12
+
+
+def test_mesh_axis_matches_fixed_mesh_brute_force():
+    """The outer argmin against the brute-force reference: one
+    independent FIXED-mesh sweep per point reproduces each point's fused
+    total exactly."""
+    tuner = _tuner(SweepDB(":memory:"), "swept")
+    plan, rep = _sweep(tuner, mesh_space=[None, {"data": 1}])
+    ref = {}
+    for name, mesh in (("local", None),
+                       ("data1[any]", MeshSpec.of(data=1).to_mesh())):
+        p, _ = _sweep(_tuner(SweepDB(":memory:"), f"fix-{name}", mesh=mesh))
+        ref[name] = p.meta["predicted_total_s"]
+    assert rep.per_mesh_total_s == pytest.approx(ref)
+    best = min(ref, key=ref.get)
+    assert plan.meta["predicted_total_s"] == pytest.approx(ref[best])
+
+
+def test_mesh_axis_shares_cache_with_fixed_mesh_sweeps(tmp_path):
+    """The content-key payoff: a fixed-mesh sweep and a mesh-axis sweep
+    of the same topology share score_cache rows — and a repeat mesh-axis
+    sweep recompiles NOTHING."""
+    db = SweepDB(str(tmp_path / "shared.db"))
+    mesh = MeshSpec.of(data=1).to_mesh()
+    _, rep_fixed = _sweep(_tuner(db, "fixed", mesh=mesh), use_cache=True)
+    assert rep_fixed.n_scored > 0
+    # the mesh-axis sweep's data1 point resolves from the fixed sweep's
+    # cache rows; only the local point compiles
+    _, rep_axis = _sweep(_tuner(db, "axis"), use_cache=True,
+                         mesh_space=[None, {"data": 1}])
+    local_only = _sweep(_tuner(SweepDB(":memory:"), "loc"))[1].n_scored
+    assert rep_axis.n_scored == local_only
+    # warm repeat: zero recompiles, identical plan bytes
+    plan_a, _ = _sweep(_tuner(db, "axis2"), use_cache=True,
+                       mesh_space=[None, {"data": 1}])
+    plan_b, rep_warm = _sweep(_tuner(db, "axis3"), use_cache=True,
+                              mesh_space=[None, {"data": 1}])
+    assert rep_warm.n_scored == 0
+    assert rep_warm.n_cached == rep_warm.n_combinations
+    assert _plan_bytes(plan_a) == _plan_bytes(plan_b)
+
+
+def test_mesh_axis_incumbent_scopes_and_pruning_exactness():
+    """Pruning with a swept mesh never changes the fused plan: incumbent
+    scopes are mesh-qualified, so one topology's best can't prune
+    another topology's argmin."""
+    from repro.core.backends import Recorder, Scheduler
+    from repro.core.tuner import SweepReport
+
+    plan_ref, _ = _sweep(_tuner(SweepDB(":memory:"), "np"),
+                         mesh_space=[None, {"data": 1}])
+    plan_pr, rep_pr = _sweep(_tuner(SweepDB(":memory:"), "pr"),
+                             mesh_space=[None, {"data": 1}],
+                             prune=True, prune_margin=0.0, workers=2)
+    assert _plan_bytes(plan_pr) == _plan_bytes(plan_ref)
+    assert (rep_pr.n_done + rep_pr.n_failed + rep_pr.n_pruned
+            == rep_pr.n_combinations)
+
+    # scheduler-level: swept jobs carry mesh-qualified scopes + per-point
+    # cache environment columns
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    db = SweepDB(":memory:")
+    db.open_project("s", "new")
+    ex = DryRunExecutor(None, timeout_s=60)
+    sched = Scheduler(db, "s", cfg, shape, None, ex)
+    segs = fragment(cfg)
+    combos = {s.name: [Combination("fsdp", frozenset(), SegmentClause())]
+              for s in segs}
+    db.register_many("s", [(s.name, combos[s.name][0], None, mp)
+                           for s in segs
+                           for mp in (LOCAL, MeshSpec.of(data=1))])
+    rec = Recorder(db, "s", SweepReport("s", 0))
+    work = sched.build(segs, combos, rec,
+                       mesh_points=[LOCAL, MeshSpec.of(data=1)])
+    mid = MeshSpec.of(data=1).mid
+    scopes = {s for j in work.jobs for s in j.segments}
+    assert any(s.startswith("local/") for s in scopes)
+    assert any(s.startswith(f"{mid}/") for s in scopes)
+    envs = {j.mesh_key for j in work.jobs}
+    assert envs == {f"local/{ex.cache_tag}", f"{mid}/{ex.cache_tag}"}
+
+
+@pytest.mark.skipif(N_DEV < 2, reason=f"needs >=2 devices, have {N_DEV}")
+def test_mesh_axis_multidevice_resharding_differentiates_boundary_costs():
+    """On a real multi-device point the Viterbi boundary costs are
+    mesh-dependent: the per-mesh fused totals under boundary_costs are
+    computed per point (and the local point charges zero)."""
+    tuner = _tuner(SweepDB(":memory:"), "bc")
+    plan, rep = _sweep(tuner, mesh_space=[None, {"data": 2}],
+                       boundary_costs=True)
+    assert set(rep.per_mesh_total_s) == {"local", "data2[any]"}
+    assert plan.meta["fusion"].startswith("viterbi-boundary") or \
+        plan.meta["fusion"].startswith("per-segment-argmin")
+    assert plan.meta["fusion"].endswith("+mesh-argmin")
+
+
+# --- the acceptance invariant ------------------------------------------------
+
+
+@pytest.mark.skipif(N_DEV < 2, reason=f"needs >=2 devices, have {N_DEV}")
+def test_mesh_axis_backend_equivalence_and_warm_cache(tmp_path):
+    """The acceptance criterion: a >=2-point mesh_space sweep fuses
+    byte-identical plans (segments, knobs AND chosen mesh) on the
+    sequential, process and remote backends; a repeat sweep against the
+    same cache recompiles nothing."""
+    from repro.core.backends.server import SweepScoringServer
+
+    space = [{"data": 1}, {"data": 2}]
+    plan_ref, rep_ref = _sweep(_tuner(SweepDB(":memory:"), "eq-seq"),
+                               backend="sequential", mesh_space=space)
+    assert plan_ref.mesh is not None and rep_ref.n_failed == 0
+    ref = _plan_bytes(plan_ref)
+
+    t_p = _tuner(SweepDB(str(tmp_path / "proc.db")), "eq-prc")
+    try:
+        plan_p, rep_p = _sweep(t_p, backend="process", workers=2,
+                               mesh_space=space, use_cache=True)
+        assert _plan_bytes(plan_p) == ref
+        assert rep_p.n_scored == rep_ref.n_scored
+        # repeat on the same DB: zero recompiles, same bytes
+        plan_w, rep_w = _sweep(_tuner(SweepDB(str(tmp_path / "proc.db")),
+                                      "eq-prc-warm"),
+                               backend="process", workers=2,
+                               mesh_space=space, use_cache=True)
+        assert _plan_bytes(plan_w) == ref
+        assert rep_w.n_scored == 0
+        assert rep_w.n_cached == rep_w.n_combinations
+    finally:
+        t_p.close()
+
+    srv = SweepScoringServer(str(tmp_path / "server.db"), workers=2)
+    srv.start()
+    try:
+        plan_r, rep_r = _sweep(_tuner(SweepDB(":memory:"), "eq-rem"),
+                               remote_url=srv.url, mesh_space=space)
+        assert _plan_bytes(plan_r) == ref
+        assert rep_r.n_failed == 0
+        # a second client is served entirely from the server's cache
+        plan_r2, rep_r2 = _sweep(_tuner(SweepDB(":memory:"), "eq-rem2"),
+                                 remote_url=srv.url, mesh_space=space)
+        assert _plan_bytes(plan_r2) == ref
+        assert rep_r2.n_scored == 0
+    finally:
+        srv.close()

@@ -473,22 +473,27 @@ def test_jobspec_joboutcome_wire_roundtrip():
     assert JobOutcome.from_json(json.loads(json.dumps(out.to_json()))) == out
 
 
-def test_executor_to_spec_rejects_meshed_executor():
-    """A process worker rebuilds its executor mesh-less; serializing a
-    meshed executor must fail loudly instead of silently scoring
-    different programs under the meshed cache key (the tuner falls back
-    to the thread backend for meshed sweeps)."""
-    import numpy as np
-
-    from repro.core.backends import executor_to_spec
+def test_executor_to_spec_serializes_mesh_as_meshspec():
+    """A fixed-mesh executor crosses the wire: its mesh travels as a
+    declarative MeshSpec (never device handles) and the worker-side
+    rebuild materializes the same topology against local devices —
+    meshed sweeps are no longer locked out of process/remote backends."""
+    from repro.core.backends import executor_from_spec, executor_to_spec
     from repro.core.executor import DryRunExecutor
+    from repro.core.meshspec import MeshSpec
 
-    class FakeMesh:                     # stands in for jax Mesh devices
-        devices = np.zeros((1,))
-        axis_names = ("data",)
-
-    with pytest.raises(TypeError, match="mesh"):
-        executor_to_spec(DryRunExecutor(FakeMesh()))
+    mesh = MeshSpec.of(data=1).to_mesh()
+    spec = json.loads(json.dumps(
+        executor_to_spec(DryRunExecutor(mesh, timeout_s=60))))
+    assert spec["mesh"] == {"axes": [["data", 1]], "device_kind": ""}
+    rebuilt = executor_from_spec(spec)
+    assert rebuilt.mesh is not None
+    assert tuple(rebuilt.mesh.axis_names) == ("data",)
+    assert rebuilt.n_chips == 1
+    # meshless executors stay meshless on the wire
+    bare = executor_to_spec(DryRunExecutor(None, timeout_s=60))
+    assert bare["mesh"] is None
+    assert executor_from_spec(bare).mesh is None
 
 
 def test_arch_shape_specs_roundtrip_via_registry():
@@ -568,11 +573,16 @@ def test_transient_rows_counted_not_scored(monkeypatch):
 
 def test_cache_tag_isolation_contract(tmp_path):
     """The docs/sweep_engine.md contract: an entry written under
-    ``dryrun:tpu-v5e`` must never be served to ``wallclock:r5``."""
+    ``dryrun:tpu-v5e`` must never be served to ``wallclock:r5:*`` — and
+    wall-clock tags embed the LOCAL PLATFORM, because empirical timings
+    from different silicon are never interchangeable (the analytic
+    dryrun tag embeds its hardware model name instead)."""
     from repro.core.executor import DryRunExecutor, WallClockExecutor
 
+    import jax
     assert DryRunExecutor(None).cache_tag == "dryrun:tpu-v5e"
-    assert WallClockExecutor(None).cache_tag == "wallclock:r5"
+    assert WallClockExecutor(None).cache_tag == \
+        f"wallclock:r5:{jax.devices()[0].platform}"
 
     db = SweepDB(str(tmp_path / "iso.db"))
     db.cache_put_many([{"signature": "sig", "shape": "train:32x4",
