@@ -26,6 +26,13 @@ With ``--globals`` an ``engine-cold-knobaxis2x`` row sweeps a 2-point
 and the run asserts the engine compiled nothing extra — the knob-
 relevance projection makes the outer axis ~free.
 
+With ``--chaos`` an ``engine-cold-chaos`` row runs the remote sweep
+through a fault-injecting proxy (``repro.core.backends.faults``) that
+drops, truncates, and 5xx-es replies on a seeded schedule — the row
+prices the retry machinery and asserts the fused plan is still
+byte-identical with zero failed rows (robustness is an optimization
+detail, not an approximation).
+
 With ``--mesh-space`` two rows sweep the topology axis
 (``mesh_space=[local, data2]`` — ``data1`` on single-device hosts) on
 the *selected* backend: ``engine-cold-meshaxis2x`` and
@@ -41,7 +48,7 @@ optimization, not an approximation) and reports speedups vs seed-style.
   PYTHONPATH=src python benchmarks/sweep_throughput.py [--quick]
       [--arch granite-8b] [--shape train_4k] [--workers N]
       [--backend thread|process|remote|both] [--assert-speedup X]
-      [--globals]
+      [--globals] [--chaos] [--mesh-space]
 """
 from __future__ import annotations
 
@@ -65,7 +72,8 @@ def _sweep(db, project, cfg, shape, space, **kw):
 def run(quick: bool = False, arch: str = "granite-8b",
         shape_name: str = "train_4k", workers: int = 0,
         backend: str = "thread", assert_speedup: float = 0.0,
-        globals_axis: bool = False, mesh_axis: bool = False):
+        globals_axis: bool = False, mesh_axis: bool = False,
+        chaos: bool = False):
     from repro.configs import get_arch, get_shape
     from repro.core.db import SweepDB
 
@@ -167,6 +175,42 @@ def run(quick: bool = False, arch: str = "granite-8b",
             finally:
                 srv.close()
 
+        if chaos:
+            from repro.core.backends import (ChaosProxy, FaultPlan,
+                                             FaultRule, RetryPolicy)
+            from repro.core.backends.faults import DROP, ERROR, TRUNCATE
+            from repro.core.backends.server import SweepScoringServer
+
+            plan_fp = FaultPlan({"proxy": (
+                FaultRule(DROP, rate=0.10),
+                FaultRule(TRUNCATE, rate=0.05),
+                FaultRule(ERROR, rate=0.05, status=503),
+            )}, seed=1234)
+            csrv = SweepScoringServer(os.path.join(tmp, "chaos-server.db"),
+                                      workers=workers)
+            proxy = ChaosProxy(csrv.start(), plan_fp)
+            try:
+                plan9, rep9, t_chaos = _sweep(
+                    SweepDB(os.path.join(tmp, "chaos.db")), "chaos", cfg,
+                    shape, space, backend="remote",
+                    remote_url=proxy.start(), use_cache=False, prune=True,
+                    retry=RetryPolicy(budget_s=60.0, base_s=0.05,
+                                      cap_s=0.5))
+            finally:
+                proxy.close()
+                csrv.close()
+            assert plan9.segments == plan0.segments, \
+                "chaos sweep changed the plan!"
+            assert rep9.n_failed == 0 and rep9.n_transient == 0, \
+                (f"chaos sweep lost rows: failed={rep9.n_failed} "
+                 f"transient={rep9.n_transient}")
+            print(f"# chaos: {len(plan_fp.events)} faults injected "
+                  f"({sum(1 for *_, k in plan_fp.events if k == DROP)} drop, "
+                  f"{sum(1 for *_, k in plan_fp.events if k == TRUNCATE)} "
+                  f"truncate, "
+                  f"{sum(1 for *_, k in plan_fp.events if k == ERROR)} 5xx)")
+            rows.append(("engine-cold-chaos", t_chaos, rep9))
+
         if globals_axis:
             # the knob axis: 2x the rows (a swept non-reaching knob),
             # same number of compiles — the axis must be ~free
@@ -247,6 +291,11 @@ def main():
     ap.add_argument("--globals", dest="globals_axis", action="store_true",
                     help="add a 2-point non-reaching GlobalKnobs axis row "
                          "(2x rows, must compile nothing extra)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="add an engine-cold-chaos row: the remote sweep "
+                         "through a seeded fault-injecting proxy "
+                         "(drops/truncations/5xx); asserts the plan stays "
+                         "byte-identical with zero failed rows")
     ap.add_argument("--mesh-space", dest="mesh_axis", action="store_true",
                     help="add cold+warm 2-point mesh/topology axis rows on "
                          "the selected backend (warm must recompile "
@@ -256,7 +305,7 @@ def main():
     run(quick=args.quick, arch=args.arch, shape_name=args.shape,
         workers=args.workers, backend=args.backend,
         assert_speedup=args.assert_speedup, globals_axis=args.globals_axis,
-        mesh_axis=args.mesh_axis)
+        mesh_axis=args.mesh_axis, chaos=args.chaos)
 
 
 if __name__ == "__main__":

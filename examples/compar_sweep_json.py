@@ -13,7 +13,8 @@ against ITS score cache first — any host that ever scored the same
 programs against that server makes this sweep free.
 
     PYTHONPATH=src python examples/compar_sweep_json.py [--backend B]
-        [--remote-url http://host:8477] [--mesh-space]
+        [--remote-url http://host:8477] [--remote-token SECRET]
+        [--mesh-space]
 """
 import argparse
 import json
@@ -45,7 +46,7 @@ MESH_SPACE = [None, {"data": 2}]
 
 
 def main(backend: str = "thread", remote_url: str = None,
-         mesh_space: bool = False):
+         remote_token: str = None, mesh_space: bool = False):
     spec = dict(SWEEP_SPEC)
     if mesh_space:
         spec["meshes"] = MESH_SPACE
@@ -76,7 +77,8 @@ def main(backend: str = "thread", remote_url: str = None,
                             global_space=global_space, mesh_space=meshes,
                             max_flags=1,
                             backend=backend, workers=workers, prune=True,
-                            remote_url=remote_url)
+                            remote_url=remote_url,
+                            remote_token=remote_token)
     print("first run:", rep.summary())
     assert rep.n_knob_points == 2
     print("per-knob fused totals:", rep.per_knob_total_s)
@@ -95,7 +97,8 @@ def main(backend: str = "thread", remote_url: str = None,
                                global_space=global_space,
                                mesh_space=meshes,
                                max_flags=1, backend=backend,
-                               remote_url=remote_url)
+                               remote_url=remote_url,
+                               remote_token=remote_token)
     print("continue run:", rep2.summary())
     assert rep2.elapsed_s < rep.elapsed_s
     assert plan2.knobs == plan.knobs       # the joint argmin is stable
@@ -112,6 +115,9 @@ if __name__ == "__main__":
                     help="sweep scoring server URL (python -m "
                          "repro.core.backends.server); implies "
                          "--backend remote")
+    ap.add_argument("--remote-token", dest="remote_token", default=None,
+                    help="shared-secret auth token for a --token scoring "
+                         "server (sent as Authorization: Bearer)")
     ap.add_argument("--mesh-space", dest="mesh_space", action="store_true",
                     help="also sweep the JSON 'meshes' topology axis "
                          "(local vs data=2; needs >=2 local devices)")

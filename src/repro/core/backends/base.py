@@ -39,7 +39,13 @@ from repro.core.segment import Segment
 #: process scores the job).  A v1 server would silently score meshed
 #: jobs mesh-less and cache them under the meshed key — exactly the
 #: misdecode the version gate exists to prevent.
-WIRE_VERSION = 2
+#:
+#: v3 added failure accounting to ``JobOutcome``: ``kind`` (the failure
+#: taxonomy bucket — "deadline"/"crash"/"mesh"/"unreachable"/"server")
+#: and ``fallback`` (scored by a local backend after the remote retry
+#: budget ran out).  A v2 peer would silently drop both fields and a
+#: degraded run would report itself as healthy.
+WIRE_VERSION = 3
 
 
 class WireVersionError(ValueError):
@@ -137,6 +143,15 @@ class JobOutcome:
     are never cached.  ``cached`` marks outcomes a worker served from the
     persistent score cache (no compile happened).  ``attempts`` counts
     dispatches, >1 after a requeue.
+
+    ``kind`` buckets failures for the SweepReport's per-kind counts:
+    "deadline" (budget overrun), "crash" (worker died twice holding the
+    job), "mesh" (this host can't satisfy the swept mesh point),
+    "unreachable" (remote server gone past the retry budget), "server"
+    (remote server failed the batch).  ``""`` on success or when the
+    producing backend predates the taxonomy — the Recorder then falls
+    back to "transient"/"deterministic".  ``fallback`` marks outcomes
+    re-scored by a local backend after the remote budget ran out.
     """
     key: str
     status: str                      # DONE | FAILED | PRUNED
@@ -145,17 +160,21 @@ class JobOutcome:
     transient: bool = False
     cached: bool = False
     attempts: int = 1
+    kind: str = ""
+    fallback: bool = False
 
     def to_json(self) -> Dict:
         return {"key": self.key, "status": self.status, "cost": self.cost,
                 "error": self.error, "transient": self.transient,
-                "cached": self.cached, "attempts": self.attempts}
+                "cached": self.cached, "attempts": self.attempts,
+                "kind": self.kind, "fallback": self.fallback}
 
     @classmethod
     def from_json(cls, d: Dict) -> "JobOutcome":
         return cls(d["key"], d["status"], d.get("cost"),
                    d.get("error", ""), bool(d.get("transient", False)),
-                   bool(d.get("cached", False)), int(d.get("attempts", 1)))
+                   bool(d.get("cached", False)), int(d.get("attempts", 1)),
+                   d.get("kind", ""), bool(d.get("fallback", False)))
 
 
 @dataclass
@@ -180,6 +199,41 @@ class JobGroup:
     scopes: set = field(default_factory=set)
     mesh: Optional[MeshSpec] = None
     mesh_key: str = ""
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """One retry contract shared across the pipeline's recovery layers.
+
+    * remote ``_request``: retry transport/5xx failures for up to
+      ``budget_s`` seconds, pausing ``pause_s(attempt)`` between tries —
+      exponential from ``base_s`` capped at ``cap_s``, with up to
+      ``jitter`` (a fraction of the pause) shaved off at random so N
+      clients recovering from one server restart don't re-poll in
+      lockstep.
+    * process requeue: a job whose worker dies is re-dispatched until it
+      has been attempted ``max_attempts`` times.
+    * scheduler: transient FAILED outcomes are re-dispatched for
+      ``sweep_retries`` extra rounds before the sweep concludes.
+
+    Frozen (hashable): tuner engine caching keys process pools by their
+    kwargs, and this rides along.
+    """
+    budget_s: float = 30.0       # per-request wall-clock retry budget
+    base_s: float = 0.25         # first backoff pause
+    cap_s: float = 2.0           # backoff pause ceiling
+    jitter: float = 0.5          # fraction of the pause randomly shaved
+    max_attempts: int = 2        # process-backend dispatches per job
+    sweep_retries: int = 1       # scheduler-level transient retry rounds
+
+    def pause_s(self, attempt: int, rng=None) -> float:
+        """Backoff pause before retry ``attempt`` (0-based), jittered."""
+        import random as _random
+        p = min(self.cap_s, self.base_s * (2.0 ** attempt))
+        if not self.jitter:
+            return p
+        r = (rng if rng is not None else _random).random()
+        return p * (1.0 - self.jitter * r)
 
 
 class IncumbentTracker:

@@ -38,8 +38,9 @@ from collections import deque
 from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
 
 from repro.core.backends.base import (FAILED, PRUNED, DONE, IncumbentTracker,
-                                      JobOutcome, JobSpec, ScoringBackend,
-                                      executor_from_spec, executor_to_spec)
+                                      JobOutcome, JobSpec, RetryPolicy,
+                                      ScoringBackend, executor_from_spec,
+                                      executor_to_spec)
 
 log = logging.getLogger("repro.backends.process")
 
@@ -70,13 +71,16 @@ def _score_one(executor, cfg, shape, spec: JobSpec, cache, shape_key: str,
         except MeshUnsatisfiable as e:
             # environment-dependent (another host may have the devices):
             # transient, so it is retryable and never cached
-            return JobOutcome(spec.key, FAILED, error=str(e), transient=True)
+            return JobOutcome(spec.key, FAILED, error=str(e), transient=True,
+                              kind="mesh")
     try:
         cost = executor.score_segment(cfg, shape, spec.seg, spec.combo,
                                       knobs=spec.knobs, **kw)
     except CombinationFailed as e:
+        transient = getattr(e, "transient", False)
         return JobOutcome(spec.key, FAILED, error=str(e),
-                          transient=getattr(e, "transient", False))
+                          transient=transient,
+                          kind="deadline" if transient else "")
     except Exception as e:
         # an analysis bug must fail the row, not kill the worker
         return JobOutcome(spec.key, FAILED,
@@ -145,10 +149,19 @@ class ProcessBackend(ScoringBackend):
                  timeout_s: Optional[float] = None,
                  db_path: Optional[str] = None,
                  shape_key: str = "", mesh_key: str = "",
-                 start_method: str = "spawn"):
+                 start_method: str = "spawn",
+                 retry: Optional[RetryPolicy] = None,
+                 fault_plan=None):
         from repro.configs.registry import arch_to_spec, shape_to_spec
         self.workers = max(1, int(workers))
         self.timeout_s = timeout_s
+        # the unified retry contract: how many dispatches a job gets
+        # before a loss becomes a transient failure
+        if retry is not None:
+            self.max_attempts = max(1, retry.max_attempts)
+        #: FaultPlan consulted at "process.kill_worker" after each
+        #: dispatch (tests only; None in production = one branch per job)
+        self.fault_plan = fault_plan
         self.prune = prune
         self.prune_margin = prune_margin
         self.tracker = IncumbentTracker(prune, prune_margin)
@@ -243,23 +256,24 @@ class ProcessBackend(ScoringBackend):
             outcomes.append(out)
         return outcomes
 
-    def _lose(self, w: _Worker, reason: str, queue, attempts, excluded
-              ) -> Optional[JobOutcome]:
-        """A busy worker died or was killed: requeue its job once, fail
-        it as transient on the second loss.  The lost worker's id joins
-        the job's excluded set so the retry is never dispatched back to
-        it (or to whatever inherits its id) — the retry must diversify,
-        not burn itself on the same slot that just died."""
+    def _lose(self, w: _Worker, reason: str, queue, attempts, excluded,
+              kind: str = "crash") -> Optional[JobOutcome]:
+        """A busy worker died or was killed: requeue its job until the
+        retry policy's ``max_attempts`` is burned, then fail it as
+        transient.  The lost worker's id joins the job's excluded set so
+        the retry is never dispatched back to it (or to whatever
+        inherits its id) — the retry must diversify, not burn itself on
+        the same slot that just died."""
         job = w.job
         self._kill(w)
         excluded.setdefault(job.key, set()).add(w.wid)
         attempts[job.key] = attempts.get(job.key, 0) + 1
         if attempts[job.key] >= self.max_attempts:
-            log.warning("job %s lost twice (%s): transient failure",
-                        job.key, reason)
+            log.warning("job %s lost %d times (%s): transient failure",
+                        job.key, attempts[job.key], reason)
             return JobOutcome(job.key, FAILED, error=f"{reason}; requeue "
                               "limit reached", transient=True,
-                              attempts=attempts[job.key])
+                              attempts=attempts[job.key], kind=kind)
         log.warning("job %s lost (%s): requeued", job.key, reason)
         queue.appendleft(job)
         return None
@@ -303,6 +317,13 @@ class ProcessBackend(ScoringBackend):
         w.job = job
         w.started = time.monotonic()
         self.dispatch_log.append((job.key, w.wid))
+        if self.fault_plan is not None and \
+                self.fault_plan.fires("process.kill_worker") is not None:
+            # chaos: the worker dies holding the job it just accepted —
+            # the liveness check sees the crash and requeues per policy
+            log.warning("fault injection: killing worker %d holding %s",
+                        w.wid, job.key)
+            w.proc.terminate()
         return True
 
     # ------------------------------------------------------------------
@@ -332,7 +353,7 @@ class ProcessBackend(ScoringBackend):
         queue = deque(jobs)
         attempts: Dict[str, int] = {}
         excluded: Dict[str, Set[int]] = {}
-        death_budget = 2 * self.workers + 2 * len(queue) + 4
+        death_budget = 2 * self.workers + self.max_attempts * len(queue) + 4
         try:
             while queue or any(w.job is not None for w in self._pool):
                 # keep the pool at strength while work remains
@@ -395,14 +416,14 @@ class ProcessBackend(ScoringBackend):
                         out = self._lose(
                             w, f"hard deadline {self.timeout_s}s exceeded "
                                f"(worker {w.wid} killed)", queue, attempts,
-                            excluded)
+                            excluded, kind="deadline")
                         if out is not None:
                             yield out
                     elif not w.proc.is_alive():
                         out = self._lose(
                             w, f"worker {w.wid} crashed "
                                f"(exit {w.proc.exitcode})", queue, attempts,
-                            excluded)
+                            excluded, kind="crash")
                         if out is not None:
                             yield out
                 if self._deaths > death_budget:

@@ -23,7 +23,8 @@ from repro.core.db import SweepDB
 class Recorder:
     def __init__(self, db: SweepDB, project: str, report, *,
                  shape_key: str = "", mesh_key: str = "",
-                 use_cache: bool = True, batch: int = 64):
+                 use_cache: bool = True, batch: int = 64,
+                 fault_plan=None):
         self.db = db
         self.project = project
         self.report = report
@@ -31,6 +32,8 @@ class Recorder:
         self.mesh_key = mesh_key
         self.use_cache = use_cache
         self.batch = max(1, int(batch))
+        #: FaultPlan consulted at "recorder.flush" (tests only)
+        self.fault_plan = fault_plan
         self._rows: List[Dict] = []
         self._cache: List[Dict] = []
 
@@ -56,6 +59,18 @@ class Recorder:
                                "status": out.status, "cost": out.cost,
                                "error": out.error})
         rep = self.report
+        # degraded-mode accounting (SweepReport): retries that happened
+        # anywhere in the pipeline (requeue, scheduler rounds, fallback
+        # handoff) and jobs a local backend picked up after the remote
+        # budget ran out — a degraded run must report itself loudly
+        rep.n_transient_retried += max(0, out.attempts - 1)
+        if out.fallback:
+            rep.n_fallback_local += len(group.members)
+        if out.status == FAILED:
+            kind = out.kind or \
+                ("transient" if out.transient else "deterministic")
+            rep.failure_kinds[kind] = \
+                rep.failure_kinds.get(kind, 0) + len(group.members)
         if out.status == PRUNED:
             rep.n_pruned += len(group.members)
         elif out.cached:
@@ -85,6 +100,9 @@ class Recorder:
             self.flush()
 
     def flush(self):
+        if self.fault_plan is not None and \
+                self.fault_plan.fires("recorder.flush") is not None:
+            raise RuntimeError("fault injection: recorder flush crashed")
         if self._rows:
             self.db.record_many(self.project, self._rows)
             self._rows = []

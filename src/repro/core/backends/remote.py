@@ -21,8 +21,12 @@ Failure contract (the part that keeps the cache honest):
   an outage can never be poisoned into ``score_cache`` as if the
   combinations themselves were bad.  A later sweep retries them.
 * **Protocol errors raise.**  HTTP 4xx (wire-version mismatch, rejected
-  executor spec) is a bug, not an outage — retrying can never succeed,
-  so the sweep fails loudly instead.
+  executor spec, bad/missing auth token) is a bug, not an outage —
+  retrying can never succeed, so the sweep fails loudly instead.
+  5xx, torn replies (truncated/corrupt JSON), and transport losses are
+  the server's problem, not the client's: all retried within the
+  :class:`~repro.core.backends.base.RetryPolicy` budget with jittered
+  exponential backoff (no thundering herd after a restart).
 
 Pruning runs client-side at submit time against the seeded incumbents
 (the server is incumbent-free: incumbents are a property of the client's
@@ -30,6 +34,7 @@ project, not of the shared score pool).
 """
 from __future__ import annotations
 
+import http.client
 import json
 import logging
 import time
@@ -40,7 +45,8 @@ from typing import Dict, Iterator, Optional, Sequence
 
 from repro.core.backends.base import (FAILED, PRUNED, WIRE_VERSION,
                                       IncumbentTracker, JobOutcome, JobSpec,
-                                      ScoringBackend, executor_to_spec)
+                                      RetryPolicy, ScoringBackend,
+                                      executor_to_spec)
 
 log = logging.getLogger("repro.backends.remote")
 
@@ -57,16 +63,28 @@ class RemoteBackend(ScoringBackend):
                  prune: bool = False, prune_margin: float = 0.1,
                  timeout_s: Optional[float] = None,
                  shape_key: str = "", mesh_key: str = "",
-                 poll_s: float = 20.0, retry_s: float = 30.0,
-                 backoff_s: float = 0.25):
+                 poll_s: float = 20.0, retry_s: Optional[float] = None,
+                 backoff_s: Optional[float] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 token: Optional[str] = None):
         from repro.configs.registry import arch_to_spec, shape_to_spec
         self.url = url.rstrip("/")
         self.prune = prune
         self.prune_margin = prune_margin
         self.tracker = IncumbentTracker(prune, prune_margin)
         self.poll_s = poll_s        # long-poll window per outcomes request
-        self.retry_s = retry_s      # connection-retry budget per request
-        self.backoff_s = backoff_s
+        # retry_s/backoff_s predate RetryPolicy; they overlay the policy
+        # so existing call sites keep their behavior
+        base = retry if retry is not None else RetryPolicy()
+        if retry_s is not None or backoff_s is not None:
+            import dataclasses
+            base = dataclasses.replace(
+                base,
+                budget_s=base.budget_s if retry_s is None else retry_s,
+                base_s=base.base_s if backoff_s is None else backoff_s)
+        self.retry = base
+        self.retry_s = self.retry.budget_s
+        self.token = token
         # a fixed-mesh executor ships its mesh as a declarative MeshSpec
         # (executor_to_spec); the server materializes it against its own
         # devices — or rejects the submit with HTTP 400 if it can't
@@ -81,38 +99,57 @@ class RemoteBackend(ScoringBackend):
     # ------------------------------------------------------------------
     def _request(self, path: str, payload: Optional[Dict] = None,
                  timeout: Optional[float] = None) -> Optional[Dict]:
-        """One HTTP exchange with idempotent connection-loss retries.
+        """One HTTP exchange with idempotent transient-failure retries.
 
         Returns the decoded JSON reply; ``_NOT_FOUND`` for a recoverable
-        404; ``None`` once the server stayed unreachable past the retry
-        budget.  Other HTTP errors raise — they are protocol bugs a
-        retry cannot fix."""
+        404; ``None`` once the server stayed unavailable past the retry
+        budget.  Retryable: transport losses (connection refused/reset,
+        timeouts), torn replies (truncated or corrupt JSON — the server
+        or a proxy died mid-write), and HTTP 5xx (the server or a proxy
+        in front of a restarting server failed the request).  Backoff is
+        jittered exponential per :class:`RetryPolicy` so a fleet of
+        clients recovering from one restart doesn't re-poll in lockstep.
+        Other HTTP errors raise — they are protocol bugs a retry cannot
+        fix; 401 in particular is never retried (a wrong token stays
+        wrong)."""
         data = json.dumps(payload).encode() if payload is not None else None
-        deadline = time.monotonic() + self.retry_s
-        pause = self.backoff_s
+        headers = {"Content-Type": "application/json"}
+        if self.token:
+            headers["Authorization"] = f"Bearer {self.token}"
+        deadline = time.monotonic() + self.retry.budget_s
+        attempt = 0
         while True:
-            req = urllib.request.Request(
-                self.url + path, data=data,
-                headers={"Content-Type": "application/json"})
+            req = urllib.request.Request(self.url + path, data=data,
+                                         headers=headers)
             try:
                 with urllib.request.urlopen(req, timeout=timeout) as resp:
                     return json.loads(resp.read().decode())
             except urllib.error.HTTPError as e:
                 if e.code == 404:
                     return _NOT_FOUND
-                body = e.read().decode(errors="replace")
-                raise RuntimeError(
-                    f"scoring server rejected {path}: "
-                    f"HTTP {e.code} {body}") from e
+                if e.code < 500:
+                    body = e.read().decode(errors="replace")
+                    hint = " (wrong or missing --token? pass " \
+                        "remote_token=/token=)" if e.code == 401 else ""
+                    raise RuntimeError(
+                        f"scoring server rejected {path}: "
+                        f"HTTP {e.code}{hint} {body}") from e
+                err: Exception = e      # 5xx: retryable server failure
             except (urllib.error.URLError, ConnectionError, OSError,
-                    TimeoutError, json.JSONDecodeError) as e:
-                if time.monotonic() >= deadline:
-                    log.warning("scoring server %s unreachable past %.1fs "
-                                "retry budget (%s): %s", self.url,
-                                self.retry_s, path, e)
-                    return None
-                time.sleep(pause)
-                pause = min(pause * 2, 2.0)
+                    TimeoutError, http.client.HTTPException,
+                    json.JSONDecodeError, UnicodeDecodeError) as e:
+                # HTTPException covers torn replies (IncompleteRead,
+                # BadStatusLine); JSON/Unicode decode failures are the
+                # same event seen one layer up — bytes from a server or
+                # proxy that died mid-write
+                err = e
+            if time.monotonic() >= deadline:
+                log.warning("scoring server %s unavailable past %.1fs "
+                            "retry budget (%s): %s", self.url,
+                            self.retry.budget_s, path, err)
+                return None
+            time.sleep(self.retry.pause_s(attempt))
+            attempt += 1
 
     def _submit(self, payload: Dict) -> Optional[str]:
         resp = self._request("/v1/submit", payload,
@@ -155,12 +192,15 @@ class RemoteBackend(ScoringBackend):
                    "jobs": [j.to_json() for j in submit]}
         pending = {j.key for j in submit}
 
-        def fail_pending(reason: str) -> Iterator[JobOutcome]:
+        def fail_pending(reason: str,
+                         kind: str = "unreachable") -> Iterator[JobOutcome]:
             # server-side losses are never a verdict on the combination:
-            # transient means the Recorder won't cache them and a later
-            # sweep (or a bigger retry budget) re-scores them
+            # transient means the Recorder won't cache them, and a
+            # FallbackBackend (or a later sweep / a scheduler retry
+            # round) re-scores them
             for key in sorted(pending):
-                yield JobOutcome(key, FAILED, error=reason, transient=True)
+                yield JobOutcome(key, FAILED, error=reason, transient=True,
+                                 kind=kind)
 
         batch = self._submit(payload)
         if batch is None:
@@ -199,7 +239,8 @@ class RemoteBackend(ScoringBackend):
             if resp.get("done") and pending:
                 err = resp.get("error") or \
                     "server finished without scoring all jobs"
-                yield from fail_pending(f"scoring server error: {err}")
+                yield from fail_pending(f"scoring server error: {err}",
+                                        kind="server")
                 return
 
     def close(self):

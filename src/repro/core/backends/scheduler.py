@@ -13,7 +13,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core.backends.base import JobGroup, JobSpec
+from repro.core.backends.base import FAILED, JobGroup, JobSpec
 from repro.core.backends.recorder import Recorder
 from repro.core.combinator import (Combination, GlobalKnobs, effective_cid,
                                    mapping_key, row_cid)
@@ -220,3 +220,44 @@ class Scheduler:
         # cheapest-bound-first: incumbents tighten early, pruning bites
         work.jobs.sort(key=lambda j: (j.bound_s, j.key))
         return work
+
+
+def drive(engine, work: SweepWork, recorder: Recorder, *,
+          transient_retries: int = 0):
+    """Run ``work`` through ``engine``, recording outcomes — with up to
+    ``transient_retries`` bounded re-dispatch rounds for transient
+    failures before the sweep concludes.
+
+    Before this existed, ``transient=True`` meant "hope someone sweeps
+    again": a deadline double-loss or an outage window left FAILED rows
+    that only a *later* sweep would retry.  Now the Scheduler level gives
+    transients another chance in-sweep: outcomes that fail transiently
+    in round N re-enter the engine in round N+1 (same engine, same
+    seeded incumbents — a retried job can still be pruned if an earlier
+    round tightened its scopes' bests).  Rounds are bounded, so the
+    no-hang guarantee is preserved: whatever is still transient after
+    the last round is recorded as before.
+
+    Attempt accounting survives rounds: ``out.attempts`` accumulates
+    across re-dispatches, so the Recorder's ``n_transient_retried``
+    counts every extra dispatch the sweep performed.
+    """
+    jobs = list(work.jobs)
+    by_key = {j.key: j for j in jobs}
+    prior: Dict[str, int] = {}
+    for round_no in range(max(0, transient_retries) + 1):
+        last = round_no == max(0, transient_retries)
+        retry: List[JobSpec] = []
+        for out in engine.run(jobs, work.incumbents):
+            out.attempts += prior.get(out.key, 0)
+            if (not last and out.status == FAILED and out.transient
+                    and out.key in by_key):
+                retry.append(by_key[out.key])
+                prior[out.key] = out.attempts
+                continue
+            group = work.groups.get(out.key)
+            if group is not None:
+                recorder.outcome(group, out)
+        if not retry:
+            return
+        jobs = retry

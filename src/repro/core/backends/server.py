@@ -27,8 +27,22 @@ Protocol (all JSON, wire version ``backends.base.WIRE_VERSION``):
     "error": str}``.  The cursor makes polls replay-safe too.
 ``GET /v1/health`` / ``GET /v1/stats``
     liveness + counters (``n_compiled``, ``n_cache_hits``,
-    ``cache_size``) — the benchmark asserts a cache-warm sweep leaves
-    ``n_compiled`` untouched.
+    ``cache_size``, ``n_evicted``) — the benchmark asserts a cache-warm
+    sweep leaves ``n_compiled`` untouched.
+
+Completed batches are TTL-evicted (``--batch-ttl-s``, default 1h): the
+outcome log of a finished batch only matters until its client drains
+it, and the client's resubmit-on-404 path makes eviction safe even for
+a client that comes back later — the resubmitted batch resolves from
+the score cache.
+
+Auth: ``--token SECRET`` requires ``Authorization: Bearer SECRET`` on
+every request (constant-time compare; 401 otherwise — clients treat
+that as a protocol error, never retried).  Binding a non-loopback host
+without a token is refused outright: an open scoring server is a free
+compile farm plus a writable shared score cache for anyone who finds
+the port.  (Transport encryption is still TLS-terminating-proxy
+territory — the token travels in clear over plain HTTP.)
 
 Client *executor* specs are deserialized with ``allow_test=False`` by
 default: accepting ``{"kind": "crash"}`` from the network would hand
@@ -40,6 +54,8 @@ from __future__ import annotations
 
 import argparse
 import hashlib
+import hmac
+import ipaddress
 import json
 import logging
 import threading
@@ -80,6 +96,7 @@ class _Batch:
         self.outcomes: List[Dict] = []
         self.done = False
         self.error = ""
+        self.finished_at: Optional[float] = None   # monotonic, for TTL
         self.cond = threading.Condition()
 
     def push(self, out: Dict):
@@ -91,6 +108,7 @@ class _Batch:
         with self.cond:
             self.done = True
             self.error = error
+            self.finished_at = time.monotonic()
             self.cond.notify_all()
 
     def read(self, after: int, wait_s: float
@@ -105,17 +123,40 @@ class _Batch:
             return list(self.outcomes[after:]), self.done, self.error
 
 
+def _is_loopback(host: str) -> bool:
+    """True for hosts that only loopback traffic can reach.  Unknown
+    names (and the all-interfaces wildcards) count as non-loopback —
+    the guard must fail closed."""
+    if host in ("localhost", ""):
+        return host == "localhost"
+    try:
+        return ipaddress.ip_address(host).is_loopback
+    except ValueError:
+        return False
+
+
 class SweepScoringServer:
     """HTTP front of a warm ProcessBackend pool + a shared score cache."""
 
     def __init__(self, db_path: str, *, workers: int = 2,
                  host: str = "127.0.0.1", port: int = 0,
-                 allow_test: bool = False, poll_cap_s: float = 60.0):
+                 allow_test: bool = False, poll_cap_s: float = 60.0,
+                 token: Optional[str] = None,
+                 batch_ttl_s: float = 3600.0):
+        if token is None and not _is_loopback(host):
+            raise ValueError(
+                f"refusing to bind non-loopback host {host!r} without a "
+                "shared-secret token: an open scoring server is a free "
+                "compile farm and a writable score cache for anyone who "
+                "finds the port — pass --token (and keep TLS termination "
+                "in front for non-trusted networks)")
         self.db = SweepDB(db_path)
         self.db_path = db_path
         self.workers = max(1, int(workers))
         self.allow_test = allow_test
         self.poll_cap_s = poll_cap_s
+        self.token = token
+        self.batch_ttl_s = batch_ttl_s
         self._lock = threading.Lock()       # batches/engines/counters
         self._db_lock = threading.Lock()    # one writer connection
         self._batches: Dict[str, _Batch] = {}
@@ -124,6 +165,7 @@ class SweepScoringServer:
         self._engines: Dict[str, Tuple[ProcessBackend, threading.Lock]] = {}
         self.n_compiled = 0                 # jobs actually compiled here
         self.n_cache_hits = 0               # jobs served from score_cache
+        self.n_evicted = 0                  # finished batches TTL-swept
         self._httpd = ThreadingHTTPServer((host, port), _make_handler(self))
         self._thread: Optional[threading.Thread] = None
 
@@ -142,12 +184,14 @@ class SweepScoringServer:
         return self.url
 
     def close(self):
-        """Stop serving and release the worker pools; idempotent."""
-        self._httpd.shutdown()
-        self._httpd.server_close()
+        """Stop serving and release the worker pools; idempotent (and
+        safe on a never-started server: shutdown() would block forever
+        waiting for a serve_forever loop that never ran)."""
         if self._thread is not None:
+            self._httpd.shutdown()
             self._thread.join(timeout=5)
             self._thread = None
+        self._httpd.server_close()
         with self._lock:
             engines, self._engines = self._engines, {}
         for engine, _ in engines.values():
@@ -163,6 +207,7 @@ class SweepScoringServer:
         ``TypeError`` / ``ValueError`` on protocol-level bad payloads —
         the handler maps those to HTTP 400 so the client fails loudly
         instead of retrying a request that can never succeed."""
+        self._evict()
         check_wire_version(payload)
         init = payload.get("init") or {}
         if not isinstance(payload.get("jobs"), list):
@@ -221,18 +266,41 @@ class SweepScoringServer:
                 "scores measured here must not be cached as the client's "
                 "environment")
 
+    def _evict(self):
+        """TTL-sweep finished batches.  Safe by construction: an evicted
+        batch polls as 404 and the client resubmits its content-keyed
+        payload, which resolves from the score cache.  Caller must NOT
+        hold ``_lock``."""
+        if self.batch_ttl_s is None or self.batch_ttl_s < 0:
+            return
+        now = time.monotonic()
+        with self._lock:
+            dead = [bid for bid, b in self._batches.items()
+                    if b.done and b.finished_at is not None
+                    and now - b.finished_at > self.batch_ttl_s]
+            for bid in dead:
+                del self._batches[bid]
+            self.n_evicted += len(dead)
+        for bid in dead:
+            log.info("evicted finished batch %s (ttl %.0fs)", bid,
+                     self.batch_ttl_s)
+
     def batch(self, bid: str) -> Optional[_Batch]:
+        self._evict()
         with self._lock:
             return self._batches.get(bid)
 
     def stats(self) -> Dict:
+        self._evict()
         with self._lock:
             n_compiled, n_hits = self.n_compiled, self.n_cache_hits
             n_batches = len(self._batches)
+            n_evicted = self.n_evicted
         with self._db_lock:
             cache_size = self.db.cache_size()
         return {"n_compiled": n_compiled, "n_cache_hits": n_hits,
                 "n_batches": n_batches, "cache_size": cache_size,
+                "n_evicted": n_evicted, "batch_ttl_s": self.batch_ttl_s,
                 "workers": self.workers}
 
     # ------------------------------------------------------------------
@@ -331,7 +399,22 @@ def _make_handler(app: SweepScoringServer):
             self.end_headers()
             self.wfile.write(body)
 
+        def _authorized(self) -> bool:
+            """Shared-secret check; replies 401 itself on failure.
+            Constant-time compare — a scoring token is still a secret."""
+            if app.token is None:
+                return True
+            got = self.headers.get("Authorization", "")
+            ok = got.startswith("Bearer ") and hmac.compare_digest(
+                got[len("Bearer "):], app.token)
+            if not ok:
+                self._reply(401, {"v": WIRE_VERSION,
+                                  "error": "missing or bad bearer token"})
+            return ok
+
         def do_POST(self):
+            if not self._authorized():
+                return
             if urlparse(self.path).path != "/v1/submit":
                 return self._reply(404, {"error": f"no route {self.path}"})
             try:
@@ -346,6 +429,8 @@ def _make_handler(app: SweepScoringServer):
                               "resumed": resumed})
 
         def do_GET(self):
+            if not self._authorized():
+                return
             u = urlparse(self.path)
             q = parse_qs(u.query)
             if u.path == "/v1/health":
@@ -386,13 +471,20 @@ def main(argv=None):
     ap.add_argument("--allow-test-executors", action="store_true",
                     help="admit sleep/crash executor specs from clients "
                          "(fault-injection CI only — never in production)")
+    ap.add_argument("--token", default=None,
+                    help="shared-secret bearer token required on every "
+                         "request (mandatory for non-loopback --host)")
+    ap.add_argument("--batch-ttl-s", type=float, default=3600.0,
+                    help="evict finished batches after this many seconds "
+                         "(clients recover via resubmit-on-404)")
     args = ap.parse_args(argv)
     logging.basicConfig(
         level=logging.INFO,
         format="%(asctime)s %(name)s %(levelname)s %(message)s")
     srv = SweepScoringServer(args.db, workers=args.workers, host=args.host,
                              port=args.port,
-                             allow_test=args.allow_test_executors)
+                             allow_test=args.allow_test_executors,
+                             token=args.token, batch_ttl_s=args.batch_ttl_s)
     url = srv.start()
     print(f"sweep scoring server listening on {url} "
           f"(db={args.db}, workers={args.workers})", flush=True)

@@ -69,6 +69,14 @@ class SweepReport:
     n_mesh_points: int = 1  # mesh/topology points swept (the mesh axis)
     paper_count: int = 0    # the paper's formula, an upper bound
     elapsed_s: float = 0.0
+    #: degraded-mode accounting — a sweep that limped home must say so
+    n_fallback_local: int = 0       # rows re-scored locally after the
+                                    # remote retry budget ran out
+    n_transient_retried: int = 0    # extra dispatches spent on transient
+                                    # recovery (requeues + retry rounds)
+    #: failure-kind histogram over FAILED rows ("deadline", "crash",
+    #: "mesh", "unreachable", "server", "deterministic", "transient")
+    failure_kinds: Dict[str, int] = field(default_factory=dict)
     #: the winning (mesh, knob) point's per-segment valid rows
     per_segment: Dict[str, List[Tuple[Combination, CostTerms]]] = \
         field(default_factory=dict)
@@ -79,15 +87,24 @@ class SweepReport:
     per_mesh_total_s: Dict[str, float] = field(default_factory=dict)
 
     def summary(self) -> str:
-        return (f"project={self.project} knob_points={self.n_knob_points} "
-                f"mesh_points={self.n_mesh_points} "
-                f"done={self.n_done} failed={self.n_failed} "
-                f"invalid={self.n_invalid} pruned={self.n_pruned} "
-                f"scored={self.n_scored} cached={self.n_cached} "
-                f"shared={self.n_shared} transient={self.n_transient} "
-                f"realized={self.n_combinations} "
-                f"paper_formula_upper_bound={self.paper_count} "
-                f"elapsed={self.elapsed_s:.1f}s")
+        s = (f"project={self.project} knob_points={self.n_knob_points} "
+             f"mesh_points={self.n_mesh_points} "
+             f"done={self.n_done} failed={self.n_failed} "
+             f"invalid={self.n_invalid} pruned={self.n_pruned} "
+             f"scored={self.n_scored} cached={self.n_cached} "
+             f"shared={self.n_shared} transient={self.n_transient} "
+             f"realized={self.n_combinations} "
+             f"paper_formula_upper_bound={self.paper_count} "
+             f"elapsed={self.elapsed_s:.1f}s")
+        if self.n_transient_retried:
+            s += f" transient_retried={self.n_transient_retried}"
+        if self.n_fallback_local:
+            s += f" fallback_local={self.n_fallback_local}"
+        if self.failure_kinds:
+            kinds = ",".join(f"{k}:{v}" for k, v in
+                             sorted(self.failure_kinds.items()))
+            s += f" failure_kinds={kinds}"
+        return s
 
 
 class ComParTuner:
@@ -125,6 +142,10 @@ class ComParTuner:
               backend: str = "thread",
               workers: int = 1,
               remote_url: Optional[str] = None,
+              remote_token: Optional[str] = None,
+              fallback: Optional[str] = None,
+              retry=None,
+              transient_retries: Optional[int] = None,
               prune: bool = False, prune_margin: float = 0.1,
               use_cache: bool = True, share_scores: bool = True,
               record_batch: int = 64) -> Tuple[Plan, SweepReport]:
@@ -158,6 +179,23 @@ class ComParTuner:
                           implies ``backend="remote"``.  Jobs are shipped
                           as JSON and resolved against the *server's*
                           score cache first — cross-host score sharing.
+        ``remote_token``  shared-secret bearer token for a ``--token``
+                          server (401 without it is a protocol error,
+                          never retried)
+        ``fallback``      local backend name (``thread`` | ``sequential``
+                          | ``process``) that re-scores, in the same
+                          run, jobs the remote backend failed
+                          transiently (outage past the retry budget) —
+                          the degraded-mode path; counted loudly in
+                          ``SweepReport.n_fallback_local``
+        ``retry``         a :class:`~repro.core.backends.RetryPolicy`
+                          overriding the pipeline's retry contract
+                          (request budget/backoff, per-job dispatch
+                          attempts, scheduler retry rounds)
+        ``transient_retries``  bounded Scheduler-level rounds re-running
+                          transient failures in-sweep before they are
+                          recorded (default: the retry policy's
+                          ``sweep_retries``, 1)
         ``prune``         exact lower-bound pruning on/off
         ``prune_margin``  relative headroom the bound must clear
         ``use_cache``     persistent structural score cache on/off
@@ -197,6 +235,9 @@ class ComParTuner:
         if backend == "remote" and not remote_url:
             raise ValueError("backend='remote' needs remote_url "
                              "(the sweep scoring server URL)")
+        if fallback is not None and backend != "remote":
+            raise ValueError("fallback= is the remote backend's degraded "
+                             "mode; it needs remote_url/backend='remote'")
         if workers > 1 and not getattr(self.executor, "parallel_safe", True):
             log.warning("workers=%d -> 1: %s timings would contend on the "
                         "device", workers, type(self.executor).__name__)
@@ -242,7 +283,9 @@ class ComParTuner:
         self._execute(segs, per_seg_combos, points, rep,
                       mesh_points=mpoints,
                       backend=backend, workers=workers,
-                      remote_url=remote_url, prune=prune,
+                      remote_url=remote_url, remote_token=remote_token,
+                      fallback=fallback, retry=retry,
+                      transient_retries=transient_retries, prune=prune,
                       prune_margin=prune_margin, use_cache=use_cache,
                       share_scores=share_scores, record_batch=record_batch)
 
@@ -295,12 +338,16 @@ class ComParTuner:
                  rep: SweepReport, *,
                  mesh_points: Optional[Sequence[MeshSpec]],
                  backend: str, workers: int,
-                 remote_url: Optional[str], prune: bool,
+                 remote_url: Optional[str],
+                 remote_token: Optional[str], fallback: Optional[str],
+                 retry, transient_retries: Optional[int], prune: bool,
                  prune_margin: float, use_cache: bool,
                  share_scores: bool, record_batch: int):
         """Score everything not already settled (Continue mode):
-        Scheduler -> ScoringBackend -> Recorder."""
-        from repro.core.backends import env_key, shape_key
+        Scheduler -> ScoringBackend -> Recorder, with bounded
+        Scheduler-level transient retry rounds (``scheduler.drive``)."""
+        from repro.core.backends import (RetryPolicy, drive, env_key,
+                                         shape_key)
         # ONE key pair for the whole pipeline: the Recorder writes cache
         # entries and the workers read them under the same sk/mk.  A
         # swept mesh point overrides mk per job (JobSpec.mesh_key).
@@ -318,12 +365,15 @@ class ComParTuner:
                                mesh_points=mesh_points)
 
         engine, transient_engine = self._engine(
-            backend, workers=workers, remote_url=remote_url, prune=prune,
-            prune_margin=prune_margin, use_cache=use_cache,
+            backend, workers=workers, remote_url=remote_url,
+            remote_token=remote_token, fallback=fallback, retry=retry,
+            prune=prune, prune_margin=prune_margin, use_cache=use_cache,
             shape_key=sk, mesh_key=mk)
+        policy = retry if retry is not None else RetryPolicy()
+        rounds = policy.sweep_retries if transient_retries is None \
+            else transient_retries
         try:
-            for out in engine.run(work.jobs, incumbents=work.incumbents):
-                recorder.outcome(work.groups[out.key], out)
+            drive(engine, work, recorder, transient_retries=rounds)
         finally:
             # flush BEFORE closing: results already scored must land in
             # the DB even if the engine's teardown throws — and a failing
@@ -336,7 +386,8 @@ class ComParTuner:
 
     # ------------------------------------------------------------------
     def _engine(self, backend: str, *, workers: int,
-                remote_url: Optional[str], prune: bool,
+                remote_url: Optional[str], remote_token: Optional[str],
+                fallback: Optional[str], retry, prune: bool,
                 prune_margin: float, use_cache: bool,
                 shape_key: str, mesh_key: str):
         """Build a ScoringBackend; cache process backends for warm-worker
@@ -357,7 +408,8 @@ class ComParTuner:
             # workers get a read-only cache view only when the cache is
             # on — use_cache=False must force real recompiles everywhere
             db_path=self.db.path if use_cache else None,
-            shape_key=shape_key, mesh_key=mesh_key, remote_url=remote_url)
+            shape_key=shape_key, mesh_key=mesh_key, remote_url=remote_url,
+            token=remote_token, retry=retry, fallback=fallback)
         if backend != "process":
             return make_backend(backend, self.executor, self.cfg,
                                 self.shape, **kw), True

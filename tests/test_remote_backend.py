@@ -353,3 +353,90 @@ def test_transient_outcomes_never_cached_never_incumbent(backend_name,
             assert backend.tracker._best == {}
     finally:
         backend.close()
+
+
+# --- shared-secret auth + batch TTL eviction ---------------------------------
+
+
+def test_token_auth_required_and_never_retried(tmp_path):
+    """A --token server 401s requests without (or with the wrong) bearer
+    token; the client treats 401 as a protocol error — raised at once,
+    with zero retry-budget burned (a wrong token stays wrong)."""
+    from repro.core.backends import RetryPolicy
+    srv = SweepScoringServer(str(tmp_path / "auth.db"), workers=1,
+                             token="s3cret")
+    srv.start()
+    try:
+        cfg = get_arch("granite-8b").smoke()
+        shape = get_shape("train_4k").smoke()
+
+        def client(token):
+            return RemoteBackend(DryRunExecutor(None), cfg, shape,
+                                 url=srv.url, token=token,
+                                 retry=RetryPolicy(budget_s=30.0,
+                                                   base_s=1.0))
+        for bad in (None, "wrong"):
+            t0 = time.monotonic()
+            with pytest.raises(RuntimeError, match="HTTP 401"):
+                client(bad)._request("/v1/health", timeout=5.0)
+            assert time.monotonic() - t0 < 5.0, "401 burned the retry budget"
+        assert client("s3cret")._request("/v1/health",
+                                         timeout=5.0)["ok"] is True
+    finally:
+        srv.close()
+
+
+def test_token_auth_sweep_end_to_end(tmp_path):
+    """remote_token= flows tuner -> make_backend -> Authorization header;
+    the authed sweep matches the open-server plan byte-for-byte."""
+    ref, _ = _sweep(_tuner(SweepDB(":memory:"), "auth-ref"),
+                    backend="sequential")
+    srv = SweepScoringServer(str(tmp_path / "auth-e2e.db"), workers=2,
+                             token="s3cret")
+    srv.start()
+    try:
+        plan, rep = _sweep(_tuner(SweepDB(":memory:"), "auth-e2e"),
+                           remote_url=srv.url, remote_token="s3cret")
+        assert _plan_bytes(plan) == _plan_bytes(ref)
+        assert rep.n_failed == 0
+    finally:
+        srv.close()
+
+
+def test_non_loopback_bind_refused_without_token(tmp_path):
+    """An open scoring server on a routable interface is a free compile
+    farm + writable score cache: refused at construction, allowed with a
+    token (and loopback stays tokenless-friendly)."""
+    with pytest.raises(ValueError, match="token"):
+        SweepScoringServer(str(tmp_path / "open.db"), host="0.0.0.0")
+    srv = SweepScoringServer(str(tmp_path / "tok.db"), host="127.0.0.1")
+    srv.close()     # loopback without token: fine (never started)
+
+
+def test_finished_batches_ttl_evicted(tmp_path):
+    """Completed batches are TTL-swept (counted in /v1/stats); an
+    evicted batch polls as 404, which the client already recovers from
+    by resubmitting."""
+    srv = SweepScoringServer(str(tmp_path / "ttl.db"), workers=1,
+                             batch_ttl_s=0.05)
+    srv.start()
+    try:
+        payload = {"v": WIRE_VERSION, "run": "ttl-nonce",
+                   "init": _dry_init(), "jobs": []}
+        bid = _post(srv.url, payload)["batch"]
+        # empty batch: finishes immediately — wait for done via the poll
+        with urllib.request.urlopen(
+                srv.url + f"/v1/outcomes?batch={bid}&after=0&wait=10",
+                timeout=30) as r:
+            assert json.loads(r.read())["done"]
+        time.sleep(0.1)                       # let the TTL lapse
+        stats = _stats(srv.url)               # stats sweeps eviction
+        assert stats["n_evicted"] >= 1
+        assert stats["n_batches"] == 0
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(
+                srv.url + f"/v1/outcomes?batch={bid}&after=0&wait=0",
+                timeout=10)
+        assert ei.value.code == 404
+    finally:
+        srv.close()
