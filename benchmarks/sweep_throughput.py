@@ -33,6 +33,16 @@ prices the retry machinery and asserts the fused plan is still
 byte-identical with zero failed rows (robustness is an optimization
 detail, not an approximation).
 
+With ``--calibrated`` two rows price the calibrated machine model
+(``repro.core.machine``) on a compute-dominated pruning scenario
+(recurrentgemma train, remat none-vs-full, ``prune_margin=0``):
+``prune-const-hw`` scores against the shipped V5E constants,
+``prune-calibrated-hw`` against a pinned slow-host profile whose
+tightened compute floor lets the bound clear the incumbent.  The
+calibrated row must prune strictly more and compile strictly less, and
+BOTH rows must fuse plans byte-identical to their own unpruned
+references — harder pruning, still exact.
+
 With ``--mesh-space`` two rows sweep the topology axis
 (``mesh_space=[local, data2]`` — ``data1`` on single-device hosts) on
 the *selected* backend: ``engine-cold-meshaxis2x`` and
@@ -48,7 +58,7 @@ optimization, not an approximation) and reports speedups vs seed-style.
   PYTHONPATH=src python benchmarks/sweep_throughput.py [--quick]
       [--arch granite-8b] [--shape train_4k] [--workers N]
       [--backend thread|process|remote|both] [--assert-speedup X]
-      [--globals] [--chaos] [--mesh-space]
+      [--globals] [--chaos] [--mesh-space] [--calibrated]
 """
 from __future__ import annotations
 
@@ -73,7 +83,7 @@ def run(quick: bool = False, arch: str = "granite-8b",
         shape_name: str = "train_4k", workers: int = 0,
         backend: str = "thread", assert_speedup: float = 0.0,
         globals_axis: bool = False, mesh_axis: bool = False,
-        chaos: bool = False):
+        chaos: bool = False, calibrated: bool = False):
     from repro.configs import get_arch, get_shape
     from repro.core.db import SweepDB
 
@@ -225,6 +235,60 @@ def run(quick: bool = False, arch: str = "granite-8b",
                  f"vs {rep1.n_scored}")
             rows.append(("engine-cold-knobaxis2x", t_knob, rep4))
 
+        if calibrated:
+            # the calibrated machine model vs the V5E constants, on the
+            # scenario where the remat compute floor actually bites: a
+            # pinned compute-dominated profile (peak ~1 GFLOP/s, so the
+            # compute term dominates memory/collective on any host —
+            # deterministic, no live microbenchmark noise) tightens the
+            # bound enough that remat=full is pruned without compiling.
+            # Each variant checks against its own unpruned reference in
+            # the same DB (the ref resolves from cache, compiling 0).
+            from repro.core.machine import MachineProfile
+            ccfg = get_arch("recurrentgemma-2b").smoke()
+            cshape = get_shape("train_4k").smoke()
+            cspace = {"remat": ("none", "full"), "kernel": ("xla",),
+                      "block_q": (16,), "block_k": (16,),
+                      "scan_unroll": (1,), "mlstm_chunk": (16,)}
+            slow = MachineProfile(platform="synthetic",
+                                  device_kind="slow-host", n_devices=1,
+                                  peak_flops={"bfloat16": 1.0e9})
+
+            def _cal_sweep(project, machine, prune):
+                from repro.core.tuner import ComParTuner
+                cdb = SweepDB(os.path.join(tmp, f"cal-{project}.db"))
+                t0 = time.perf_counter()
+                out = []
+                for prj, prn in ((project, prune), (f"{project}-ref", False)):
+                    tuner = ComParTuner(ccfg, cshape, mesh=None, db=cdb,
+                                        project=prj, mode="new",
+                                        executor="dryrun", timeout_s=300,
+                                        machine=machine)
+                    out.append(tuner.sweep(
+                        providers=["fsdp"], clause_space=cspace,
+                        max_flags=0, workers=1, use_cache=True,
+                        prune=prn, prune_margin=0.0))
+                (planp, repp), (planr, _) = out
+                assert planp.segments == planr.segments, \
+                    f"pruning changed the plan under machine={machine!r}"
+                return planp, repp, time.perf_counter() - t0
+
+            planc, repc, t_cconst = _cal_sweep("cal-const", None, True)
+            plans, reps, t_ccal = _cal_sweep("cal-slow", slow, True)
+            assert plans.segments == planc.segments, \
+                "the machine model changed the fused plan!"
+            assert reps.n_pruned > repc.n_pruned, \
+                (f"calibrated model pruned no harder: {reps.n_pruned} "
+                 f"vs {repc.n_pruned}")
+            assert reps.n_scored < repc.n_scored, \
+                (f"calibrated model skipped no compiles: {reps.n_scored} "
+                 f"vs {repc.n_scored}")
+            print(f"# calibrated: pruned {reps.n_pruned} vs "
+                  f"{repc.n_pruned} const, compiled {reps.n_scored} vs "
+                  f"{repc.n_scored} const, plans identical")
+            rows.append(("prune-const-hw", t_cconst, repc))
+            rows.append(("prune-calibrated-hw", t_ccal, reps))
+
         if mesh_axis:
             # the topology axis, on the SELECTED backend: cold sweeps
             # both mesh points (MeshSpec wire format — process/remote
@@ -296,6 +360,12 @@ def main():
                          "through a seeded fault-injecting proxy "
                          "(drops/truncations/5xx); asserts the plan stays "
                          "byte-identical with zero failed rows")
+    ap.add_argument("--calibrated", action="store_true",
+                    help="add prune-const-hw / prune-calibrated-hw rows: "
+                         "the same pruning sweep under the V5E constants "
+                         "vs a pinned slow-host machine profile; the "
+                         "calibrated row must prune strictly more, compile "
+                         "strictly less, and fuse the identical plan")
     ap.add_argument("--mesh-space", dest="mesh_axis", action="store_true",
                     help="add cold+warm 2-point mesh/topology axis rows on "
                          "the selected backend (warm must recompile "
@@ -305,7 +375,8 @@ def main():
     run(quick=args.quick, arch=args.arch, shape_name=args.shape,
         workers=args.workers, backend=args.backend,
         assert_speedup=args.assert_speedup, globals_axis=args.globals_axis,
-        mesh_axis=args.mesh_axis, chaos=args.chaos)
+        mesh_axis=args.mesh_axis, chaos=args.chaos,
+        calibrated=args.calibrated)
 
 
 if __name__ == "__main__":

@@ -84,6 +84,18 @@ class JobSpec:
     are the group's persistent-cache key components, shipped so a worker
     can consult the shared score cache itself.
 
+    ``slack_s`` is the boundary-cost pruning allowance: when fusion
+    charges layout-transition costs (``boundary_costs=True``), a
+    combination may lose the per-segment comparison yet still win the
+    Viterbi chain by avoiding reshards, so the exact prune condition
+    loosens to ``bound > incumbent * (1 + margin) + slack_s`` where
+    ``slack_s`` is (n_segments - 1) times the largest possible single
+    boundary cost (``fusion.max_boundary_cost_s``) — the most any
+    chain total can sit above the sum of its per-segment minima.
+    ``0.0`` (the default, and the value under per-segment-argmin
+    fusion) restores the strict check.  Wire-tolerant: absent on old
+    payloads -> 0.0, which only prunes *less*, never wrongly.
+
     ``mesh`` is the swept topology point the program must be built
     under, as a declarative :class:`~repro.core.meshspec.MeshSpec` —
     whichever process scores the job materializes it against its own
@@ -107,6 +119,7 @@ class JobSpec:
     knobs: Optional[GlobalKnobs] = None
     mesh: Optional[MeshSpec] = None
     mesh_key: str = ""
+    slack_s: float = 0.0
 
     def to_json(self) -> Dict:
         return {"key": self.key, "seg": self.seg.to_json(),
@@ -117,7 +130,7 @@ class JobSpec:
                 if self.knobs is not None else None,
                 "mesh": self.mesh.to_json()
                 if self.mesh is not None else None,
-                "mesh_key": self.mesh_key}
+                "mesh_key": self.mesh_key, "slack_s": self.slack_s}
 
     @classmethod
     def from_json(cls, d: Dict) -> "JobSpec":
@@ -130,7 +143,8 @@ class JobSpec:
                    if d.get("knobs") else None,
                    MeshSpec.from_json(d["mesh"])
                    if d.get("mesh") else None,
-                   d.get("mesh_key", ""))
+                   d.get("mesh_key", ""),
+                   float(d.get("slack_s", 0.0)))
 
 
 @dataclass
@@ -246,6 +260,16 @@ class IncumbentTracker:
     ``"<knob kid>/<segment>"`` so an incumbent from one knob point never
     prunes another point's rows (each knob point needs its own
     per-segment argmin for the joint solve to stay exact).
+
+    ``job.slack_s`` (boundary-cost fusion) is added on the incumbent
+    side of the check: if the pruned combination's bound still exceeds
+    every scope's best plus the largest possible total boundary-cost
+    divergence of a chain, no Viterbi path through it can beat the
+    chain built from the per-segment bests — so the joint argmin is
+    unchanged.  Proof sketch: any chain through combo c on segment s
+    costs >= bound(c) + sum of the other segments' true minima; the
+    optimal chain costs <= sum of all per-segment minima +
+    (n_segments - 1) * max_boundary_cost.
     """
 
     def __init__(self, prune: bool = False, prune_margin: float = 0.1):
@@ -276,7 +300,8 @@ class IncumbentTracker:
         with self._lock:
             return all(
                 s in self._best and
-                job.bound_s > self._best[s] * (1.0 + self.prune_margin)
+                job.bound_s > (self._best[s] * (1.0 + self.prune_margin)
+                               + job.slack_s)
                 for s in job.segments)
 
 

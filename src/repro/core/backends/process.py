@@ -47,6 +47,39 @@ log = logging.getLogger("repro.backends.process")
 _POLL_S = 0.05          # parent event-loop tick
 _SPAWN_TIMEOUT_S = 120  # budget for a worker to import jax and report ready
 
+#: set once the forkserver has been asked to preload jax (the request is
+#: sticky for the life of the forkserver process, so asking again is
+#: pointless — and ignored by the stdlib once the server is running)
+_FORKSERVER_PRELOADED = False
+
+
+def _resolve_ctx(start_method: str):
+    """Resolve a start-method name to a multiprocessing context.
+
+    ``"auto"`` prefers **forkserver** with jax preloaded into the server
+    process: the stdlib forkserver imports the preload list once, and
+    every worker then *forks* from that warm interpreter — spawning a
+    worker costs a fork plus executor construction instead of a cold
+    multi-second jax import.  (Preloading only imports jax; backends
+    initialize lazily in each worker, so the fork never clones live
+    device state.)  Platforms without forkserver fall back to plain
+    ``"spawn"``.  Explicit method names pass through unchanged, so
+    ``start_method="spawn"`` still means spawn.
+    """
+    global _FORKSERVER_PRELOADED
+    if start_method != "auto":
+        return mp.get_context(start_method)
+    if "forkserver" not in mp.get_all_start_methods():
+        return mp.get_context("spawn")
+    ctx = mp.get_context("forkserver")
+    if not _FORKSERVER_PRELOADED:
+        try:
+            ctx.set_forkserver_preload(["jax"])
+            _FORKSERVER_PRELOADED = True
+        except Exception as e:     # pragma: no cover - stdlib quirk
+            log.debug("forkserver preload unavailable: %s", e)
+    return ctx
+
 
 # --- worker side -------------------------------------------------------------
 
@@ -149,7 +182,7 @@ class ProcessBackend(ScoringBackend):
                  timeout_s: Optional[float] = None,
                  db_path: Optional[str] = None,
                  shape_key: str = "", mesh_key: str = "",
-                 start_method: str = "spawn",
+                 start_method: str = "auto",
                  retry: Optional[RetryPolicy] = None,
                  fault_plan=None):
         from repro.configs.registry import arch_to_spec, shape_to_spec
@@ -165,7 +198,7 @@ class ProcessBackend(ScoringBackend):
         self.prune = prune
         self.prune_margin = prune_margin
         self.tracker = IncumbentTracker(prune, prune_margin)
-        self._ctx = mp.get_context(start_method)
+        self._ctx = _resolve_ctx(start_method)
         self._pool: List[_Worker] = []
         self._next_wid = 0
         self._deaths = 0            # workers lost (crash or kill)

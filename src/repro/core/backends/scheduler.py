@@ -19,6 +19,7 @@ from repro.core.combinator import (Combination, GlobalKnobs, effective_cid,
                                    mapping_key, row_cid)
 from repro.core.cost_model import CostTerms, V5E, combo_lower_bound
 from repro.core.db import SweepDB
+from repro.core.fusion import max_boundary_cost_s
 from repro.core.meshspec import MeshSpec
 from repro.core.segment import Segment
 from repro.core.validator import validate_combination
@@ -74,7 +75,8 @@ class Scheduler:
                  validate: bool = False, share_scores: bool = True,
                  use_cache: bool = True,
                  shape_key: Optional[str] = None,
-                 mesh_key: Optional[str] = None):
+                 mesh_key: Optional[str] = None,
+                 boundary_slack: bool = False):
         self.db = db
         self.project = project
         self.cfg = cfg
@@ -84,6 +86,9 @@ class Scheduler:
         self.validate = validate
         self.share_scores = share_scores
         self.use_cache = use_cache
+        # boundary-cost fusion is active: jobs carry the Viterbi pruning
+        # allowance (JobSpec.slack_s) so prune=True stays exact under it
+        self.boundary_slack = boundary_slack
         # the cache keys the pipeline reads AND writes under — a caller
         # (the tuner) passes one pair so write and read can't desync
         self.shape_key = shape_key if shape_key is not None \
@@ -193,6 +198,10 @@ class Scheduler:
         # persistent cache stage: resolve whole groups without compiling
         fixed_chips = getattr(self.executor, "n_chips", 1)
         hw = getattr(self.executor, "hw", V5E)
+        fixed_axes = dict(zip(self.mesh.axis_names,
+                              self.mesh.devices.shape)) \
+            if self.mesh is not None else None
+        slack_memo: Dict[int, float] = {}
         for key, g in list(work.groups.items()):
             env = g.mesh_key or work.mesh_key
             hit = self.db.cache_get(g.signature, work.shape_key,
@@ -208,13 +217,23 @@ class Scheduler:
                 del work.groups[key]
                 continue
             n_chips = g.mesh.n_devices if g.mesh is not None else fixed_chips
+            mesh_axes = g.mesh.axis_sizes() if g.mesh is not None \
+                else fixed_axes
+            slack = 0.0
+            if self.boundary_slack and len(segs) > 1 and n_chips > 1:
+                slack = slack_memo.get(n_chips)
+                if slack is None:
+                    slack = (len(segs) - 1) * max_boundary_cost_s(
+                        self.cfg, self.shape, n_chips, hw)
+                    slack_memo[n_chips] = slack
             work.jobs.append(JobSpec(
                 key, g.seg, g.combo, segments=tuple(sorted(g.scopes)),
                 bound_s=combo_lower_bound(self.cfg, self.shape, g.seg,
                                           g.combo, n_chips, hw,
-                                          knobs=g.knobs),
+                                          knobs=g.knobs,
+                                          mesh_axes=mesh_axes),
                 signature=g.signature, eff_cid=g.eff_cid, knobs=g.knobs,
-                mesh=g.mesh, mesh_key=g.mesh_key))
+                mesh=g.mesh, mesh_key=g.mesh_key, slack_s=slack))
         recorder.flush()
 
         # cheapest-bound-first: incumbents tighten early, pruning bites

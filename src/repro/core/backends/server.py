@@ -142,7 +142,8 @@ class SweepScoringServer:
                  host: str = "127.0.0.1", port: int = 0,
                  allow_test: bool = False, poll_cap_s: float = 60.0,
                  token: Optional[str] = None,
-                 batch_ttl_s: float = 3600.0):
+                 batch_ttl_s: float = 3600.0,
+                 calibrate: bool = False):
         if token is None and not _is_loopback(host):
             raise ValueError(
                 f"refusing to bind non-loopback host {host!r} without a "
@@ -152,6 +153,18 @@ class SweepScoringServer:
                 "in front for non-trusted networks)")
         self.db = SweepDB(db_path)
         self.db_path = db_path
+        #: this host's measured MachineProfile (``--calibrate``): loaded
+        #: from (or measured into) the server DB's ``machine_cache``, so
+        #: every ``machine="auto"`` tuner sharing this DB — including
+        #: remote clients pointed at the same file — reuses one profile
+        #: instead of re-running microbenchmarks.  Surfaced in
+        #: ``/v1/stats`` so clients can see what this host measured.
+        self.profile = None
+        if calibrate:
+            from repro.core.machine import load_or_calibrate
+            self.profile = load_or_calibrate(self.db, tiny=True)
+            log.info("host profile %s (pid %s)", self.profile.key,
+                     self.profile.pid[:12])
         self.workers = max(1, int(workers))
         self.allow_test = allow_test
         self.poll_cap_s = poll_cap_s
@@ -301,7 +314,12 @@ class SweepScoringServer:
         return {"n_compiled": n_compiled, "n_cache_hits": n_hits,
                 "n_batches": n_batches, "cache_size": cache_size,
                 "n_evicted": n_evicted, "batch_ttl_s": self.batch_ttl_s,
-                "workers": self.workers}
+                "workers": self.workers,
+                "machine": ({"key": self.profile.key,
+                             "pid": self.profile.pid,
+                             "hbm_bw": self.profile.hbm_bw,
+                             "peak_flops": dict(self.profile.peak_flops)}
+                            if self.profile is not None else None)}
 
     # ------------------------------------------------------------------
     def _engine_for(self, init: Dict) -> Tuple[ProcessBackend,
@@ -477,6 +495,10 @@ def main(argv=None):
     ap.add_argument("--batch-ttl-s", type=float, default=3600.0,
                     help="evict finished batches after this many seconds "
                          "(clients recover via resubmit-on-404)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="measure (or load) this host's MachineProfile "
+                         "into the server DB's machine_cache at startup "
+                         "and expose it in /v1/stats")
     args = ap.parse_args(argv)
     logging.basicConfig(
         level=logging.INFO,
@@ -484,7 +506,8 @@ def main(argv=None):
     srv = SweepScoringServer(args.db, workers=args.workers, host=args.host,
                              port=args.port,
                              allow_test=args.allow_test_executors,
-                             token=args.token, batch_ttl_s=args.batch_ttl_s)
+                             token=args.token, batch_ttl_s=args.batch_ttl_s,
+                             calibrate=args.calibrate)
     url = srv.start()
     print(f"sweep scoring server listening on {url} "
           f"(db={args.db}, workers={args.workers})", flush=True)

@@ -96,9 +96,9 @@ def terms_from_analysis(flops: float, bytes_accessed: float,
 #
 # ``combo_lower_bound`` is a *certified underestimate* of the score the
 # Executor would produce for (segment, combination): it counts only matmul
-# FLOPs that are guaranteed to appear as HLO ``dot`` ops (projection and
-# dense-FFN matmuls; attention score matmuls, MoE expert matmuls and
-# recurrent cells are deliberately omitted — omission keeps the bound
+# FLOPs and weight bytes that are guaranteed to appear as HLO ``dot`` ops
+# (projection and dense-FFN matmuls; attention score matmuls and MoE
+# expert matmuls are deliberately omitted — omission keeps the bound
 # sound).  The sweep engine skips a combination whose bound already
 # exceeds the segment's incumbent best: since bound <= true score, a
 # pruned combination can never be the argmin, so pruning is exact.
@@ -107,18 +107,87 @@ def terms_from_analysis(flops: float, bytes_accessed: float,
 #: (bwd = dgrad + wgrad = 2x fwd dots; full remat re-runs the forward).
 REMAT_FLOP_MULT = {"none": 3.0, "dots": 3.0, "full": 4.0}
 
+#: guaranteed distinct-weight re-read count per training step, per remat
+#: mode, for stack segments (fwd read + wgrad read; full remat streams
+#: the weights a third time for the backward replay).
+REMAT_WEIGHT_READS = {"none": 2.0, "dots": 2.0, "full": 3.0}
+
+_DTYPE_ITEMSIZE = {"bfloat16": 2, "float16": 2, "float32": 4,
+                   "float8_e4m3fn": 1, "float8_e5m2": 1}
+
+
+def _itemsize(dtype: str) -> int:
+    n = _DTYPE_ITEMSIZE.get(dtype)
+    if n is None:
+        import numpy as np
+        n = int(np.dtype(dtype).itemsize)
+    return n
+
+
+def _block_proj_elems(cfg: ArchConfig, kind: str):
+    """``(proj_elems, extra_fwd_flops_per_token)`` for one block.
+
+    ``proj_elems`` counts weight elements of the dense ``x @ W``
+    projections guaranteed to lower as HLO dots applied once per token:
+    forward dot FLOPs are exactly ``2 * tokens * proj_elems`` and every
+    element is streamed at least once per pass, so one number certifies
+    both the FLOP and the weight-byte floor.  ``extra`` is additional
+    guaranteed per-token forward dot FLOPs whose weights are re-read
+    once per *scan step* rather than once per token (the sLSTM
+    recurrent cell): they tighten the FLOP floor but MUST NOT enter the
+    weight-byte floor — ``flops / 2`` would overestimate their unique
+    weight traffic by the batch factor, breaking soundness.
+
+    Dimension guards mirror the model's asserts (``mlstm_dims`` /
+    ``slstm_dims``): a config those would reject returns zero floors
+    instead of raising — the bound must never fail where scoring would
+    merely record a failed combination.
+    """
+    d = cfg.d_model
+    if kind.startswith("attn"):
+        dh = cfg.head_dim_
+        elems = (d * cfg.num_heads * dh            # wq
+                 + 2.0 * d * cfg.num_kv_heads * dh  # wk + wv
+                 + cfg.num_heads * dh * d)          # wo
+        if kind == "attn" and cfg.d_ff:             # dense FFN (MoE: omitted)
+            elems += (3 if cfg.glu else 2) * d * cfg.d_ff
+        return elems, 0.0
+    if kind == "rec":
+        dr = int(cfg.expand_factor * d)
+        # w_gate + w_x, w_a + w_i (full-sequence, outside the rglru scan),
+        # w_out, then the block's dense FFN
+        elems = 2.0 * d * dr + 2.0 * dr * dr + dr * d
+        if cfg.d_ff:
+            elems += (3 if cfg.glu else 2) * d * cfg.d_ff
+        return elems, 0.0
+    if kind == "mlstm":
+        di = int(cfg.expand_factor * d)
+        if di % cfg.num_heads:
+            return 0.0, 0.0
+        # w_up, wq/wk/wv ("bsi,ihd->bhsd", full-sequence), w_if, w_down
+        elems = (d * 2.0 * di + 3.0 * di * di
+                 + d * 2.0 * cfg.num_heads + di * d)
+        return elems, 0.0
+    if kind == "slstm":
+        H = cfg.num_heads
+        if d % H:
+            return 0.0, 0.0
+        dh = d // H
+        ff = max(64, int(round(d * 4 / 3 / 64)) * 64)
+        # zx gate projection ("bsd,dghe->bsghe" with 4*H*dh == 4d) + FFN
+        elems = 4.0 * d * d + d * 2.0 * ff + ff * d
+        # recurrent zr einsum ("bhe,hged->bghd") inside lax.scan: 2 FLOPs
+        # per element of r=(H,4,dh,dh) per token, weights reused across
+        # the batch each step
+        extra = 8.0 * H * dh * dh
+        return elems, extra
+    return 0.0, 0.0
+
 
 def _block_fwd_flops_per_token(cfg: ArchConfig, kind: str) -> float:
     """Guaranteed-present forward dot FLOPs per token for one block."""
-    if not kind.startswith("attn"):
-        return 0.0          # recurrent/xLSTM cells: conservatively omitted
-    d, dh = cfg.d_model, cfg.head_dim_
-    qo = 2.0 * d * cfg.num_heads * dh * 2       # wq + wo
-    kv = 2.0 * d * cfg.num_kv_heads * dh * 2    # wk + wv
-    ffn = 0.0
-    if kind == "attn" and cfg.d_ff:             # dense FFN (MoE: omitted)
-        ffn = (3 if cfg.glu else 2) * 2.0 * d * cfg.d_ff
-    return qo + kv + ffn
+    proj, extra = _block_proj_elems(cfg, kind)
+    return 2.0 * proj + extra
 
 
 def segment_forward_flops(cfg: ArchConfig, shape: ShapeConfig,
@@ -135,23 +204,82 @@ def segment_forward_flops(cfg: ArchConfig, shape: ShapeConfig,
     return tokens * per_super * segment.repeats
 
 
+def segment_weight_elems(cfg: ArchConfig, segment) -> float:
+    """Certified count of distinct dot-operand weight elements in one
+    segment.  Feeds the memory-traffic floor; float32 masters (rglru
+    ``w_a``/``w_i``, sLSTM gates) are counted at ``cfg.dtype`` itemsize
+    — underestimating traffic keeps the floor sound."""
+    if segment.kind == "embed":
+        return 0.0              # the table is gathered, not streamed as a dot
+    if segment.kind == "head":
+        return float(cfg.d_model) * cfg.vocab_size
+    per_super = sum(_block_proj_elems(cfg, k)[0] for k in segment.pattern)
+    return per_super * segment.repeats
+
+
+def _batch_shard_degree(cfg: ArchConfig, shape: ShapeConfig, segment,
+                        combo, mesh_axes) -> int:
+    """How many ways this combination's provider shards the batch axis
+    under ``mesh_axes`` (dict of mesh axis name -> size).
+
+    Mirrors the timer's pspec resolution byte-for-byte: ``batch`` is
+    the first logical axis every program resolves, against an empty
+    used-set, through the provider mapping's candidate list with the
+    divisibility fallback.  Anything unresolvable means "no certified
+    batch sharding" and returns 1 (no collective floor) — sound.
+    """
+    try:
+        from repro.core.providers import get_provider
+        from repro.runtime.sharding import Rules
+        mapping = get_provider(combo.provider).mapping(
+            cfg, dict(mesh_axes), combo.flags, segment)
+        rules = Rules(mapping, None)
+        rules.axis_sizes = dict(mesh_axes)
+        axes = rules._resolve_one("batch", shape.global_batch, set())
+    except Exception:
+        return 1
+    g = 1
+    for a in axes or ():
+        g *= int(mesh_axes[a])
+    return g
+
+
 def combo_lower_bound(cfg: ArchConfig, shape: ShapeConfig, segment,
                       combo, n_chips: int = 1, hw: Hardware = V5E,
-                      knobs=None) -> float:
-    """Roofline lower bound (seconds) on scoring (segment, combination)
-    under one GlobalKnobs point.
+                      knobs=None, mesh_axes=None) -> float:
+    """Certified roofline lower bound (seconds) on scoring
+    (segment, combination) under one GlobalKnobs point and one mesh.
 
-    Uses only the compute term: the memory-traffic estimator in
-    ``runtime.hlo`` is not guaranteed to count parameter reads, so a
-    byte-based term could overshoot the true score and break exactness.
+    Three floors, composed with ``max`` exactly like
+    :attr:`CostTerms.total_s`:
 
-    ``knobs`` keeps pruning exact across the swept knob axis.  The
-    current terms are knob-invariant *by soundness*: microbatching
-    still processes every token once per fwd/bwd pass (the accumulation
-    adds and the 1/mb scale only add FLOPs), and donation /
-    ``opt_state_dtype`` never remove dot ops — so the bound below holds
-    for every knob point.  A future knob that legitimately lowers the
-    floor (e.g. reduced-precision matmuls) must discount here.
+    * **compute**: guaranteed dot FLOPs for every block kind (attention
+      projections/FFN, rglru full-sequence gates, mLSTM up/qkv/down,
+      sLSTM gates + recurrent cell), times the remat fwd+bwd multiple,
+      over aggregate peak FLOP/s.
+    * **memory**: distinct dot-operand weight bytes times the
+      guaranteed re-read count (fwd + wgrad; +1 for the full-remat
+      replay; the grad-accumulation scan re-streams the weights every
+      microbatch trip, so ``knobs.microbatches`` multiplies on train
+      shapes), over aggregate HBM bandwidth.
+    * **collective** (train, stack/head segments, ``mesh_axes`` given):
+      if the provider shards the batch axis ``g`` ways, gradients must
+      be combined across those ``g`` replicas — at least a ring pass
+      of ``(g-1)/g * min(weight bytes, residual-activation bytes)``
+      (XLA may all-gather activations instead of reducing grads; embed
+      segments are excluded because their activation side is a tiny
+      int32 token stream), spread over ``n_chips`` links.
+
+    Certification under calibration: the bound divides by the *same*
+    ``hw`` the executor's scorer divides by (``analyze_compiled`` uses
+    ``executor.hw``), so a calibrated profile rescales bound and score
+    together and ``bound <= score`` survives any profile.  ``knobs``
+    terms only ever *add* guaranteed work (microbatching still
+    processes every token once per pass; donation / ``opt_state_dtype``
+    never remove dots), so the bound holds pointwise across the knob
+    axis.  ``mesh_axes`` is the declarative axis->size dict of the
+    point being scored (from ``MeshSpec.axis_sizes()`` or a live mesh);
+    omitting it simply drops the collective floor.
     """
     fwd = segment_forward_flops(cfg, shape, segment)
     if shape.kind != "train":
@@ -160,7 +288,33 @@ def combo_lower_bound(cfg: ArchConfig, shape: ShapeConfig, segment,
         mult = REMAT_FLOP_MULT.get(combo.clause.remat, 1.0)
     else:
         mult = 3.0                              # plain fwd + bwd
-    return fwd * mult / (n_chips * hw.peak_flops)
+    compute_s = fwd * mult / (n_chips * hw.peak_flops)
+
+    itemsize = _itemsize(cfg.dtype)
+    welems = segment_weight_elems(cfg, segment)
+    memory_s = 0.0
+    if welems:
+        if shape.kind == "train":
+            reads = REMAT_WEIGHT_READS.get(combo.clause.remat, 1.0) \
+                if segment.kind == "stack" else 2.0
+            mb = getattr(knobs, "microbatches", 1) if knobs is not None else 1
+            reads *= max(1, int(mb))
+        else:
+            reads = 1.0
+        memory_s = welems * itemsize * reads / (n_chips * hw.hbm_bw)
+
+    collective_s = 0.0
+    if (shape.kind == "train" and segment.kind in ("stack", "head")
+            and mesh_axes and n_chips > 1 and welems):
+        g = _batch_shard_degree(cfg, shape, segment, combo, mesh_axes)
+        if g > 1:
+            act_bytes = (shape.global_batch * shape.seq_len
+                         * cfg.d_model * itemsize)
+            w_bytes = welems * itemsize
+            collective_s = ((g - 1) / g * min(w_bytes, act_bytes)
+                            / (n_chips * hw.link_bw))
+
+    return max(compute_s, memory_s, collective_s)
 
 
 # --- analytic MODEL_FLOPS (the "useful compute" yardstick) -------------------

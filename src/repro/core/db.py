@@ -44,6 +44,12 @@ CREATE TABLE IF NOT EXISTS score_cache (
     total_s REAL,                    -- denormalized cost for keep-best upserts
     PRIMARY KEY (signature, shape, mesh, cid)
 );
+CREATE TABLE IF NOT EXISTS machine_cache (
+    key TEXT PRIMARY KEY,            -- machine.profile_key(): versioned host id
+    pid TEXT,                        -- profile content hash
+    profile TEXT,                    -- MachineProfile JSON
+    created REAL
+);
 """
 
 
@@ -264,6 +270,26 @@ class SweepDB:
             % (self._STATUS_RANK % "score_cache.status",
                self._STATUS_RANK % "excluded.status"),
             rows)
+        self.conn.commit()
+
+    # --- calibrated machine profiles ----------------------------------------
+    def machine_get(self, key: str) -> Optional[Dict]:
+        cur = self.conn.execute(
+            "SELECT profile FROM machine_cache WHERE key=?", (key,))
+        row = cur.fetchone()
+        if row is None:
+            return None
+        try:
+            return json.loads(row[0])
+        except ValueError:
+            return None
+
+    def machine_put(self, key: str, pid: str, profile: Dict):
+        # recalibration replaces: newest measurement wins (the pid makes
+        # the swap visible to anything that cached the old hash)
+        self.conn.execute(
+            "INSERT OR REPLACE INTO machine_cache VALUES (?,?,?,?)",
+            (key, pid, json.dumps(profile), time.time()))
         self.conn.commit()
 
     def cache_size(self) -> int:

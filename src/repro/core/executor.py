@@ -418,12 +418,17 @@ class ParallelSweepRunner:
         self.tracker.seed(incumbents)
         n_chips = getattr(self.executor, "n_chips", 1)
         hw = getattr(self.executor, "hw", V5E)
+        mesh = getattr(self.executor, "mesh", None)
+        fixed_axes = dict(zip(mesh.axis_names, mesh.devices.shape)) \
+            if mesh is not None else None
         for job in jobs:
             if job.bound_s <= 0.0:      # Scheduler-built jobs arrive bounded
                 job.bound_s = combo_lower_bound(
                     self.cfg, self.shape, job.seg, job.combo,
                     job.mesh.n_devices if job.mesh is not None else n_chips,
-                    hw, knobs=job.knobs)
+                    hw, knobs=job.knobs,
+                    mesh_axes=job.mesh.axis_sizes()
+                    if job.mesh is not None else fixed_axes)
         ordered = sorted(jobs, key=lambda j: (j.bound_s, j.key))
 
         if self.workers == 1:

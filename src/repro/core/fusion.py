@@ -71,6 +71,26 @@ def boundary_cost_s(cfg: ArchConfig, shape: ShapeConfig, mesh,
     return bytes_total / (chips * hw.link_bw)
 
 
+def max_boundary_cost_s(cfg: ArchConfig, shape: ShapeConfig,
+                        n_chips: int, hw: Hardware = V5E) -> float:
+    """Upper bound on ONE boundary's resharding cost under any pair of
+    combinations — the per-boundary unit of ``JobSpec.slack_s``.
+
+    :func:`boundary_cost_s` is either 0 (same pspec, or no mesh) or the
+    combination-independent constant ``residual_bytes / (chips *
+    link_bw)``; this returns that constant (0 when meshless), so
+    ``(n_segments - 1) * max_boundary_cost_s`` certifiably dominates the
+    total transition cost of every possible chain.
+    """
+    if n_chips <= 1:
+        return 0.0
+    if shape.kind == "decode":
+        elems = shape.global_batch * cfg.d_model
+    else:
+        elems = shape.global_batch * shape.seq_len * cfg.d_model
+    return elems * np.dtype(cfg.dtype).itemsize / (n_chips * hw.link_bw)
+
+
 def fuse(cfg: ArchConfig, shape: ShapeConfig, mesh,
          results: Dict[str, List[Tuple[Combination, CostTerms]]],
          knobs: GlobalKnobs = GlobalKnobs(), *,

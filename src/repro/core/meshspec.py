@@ -27,7 +27,7 @@ from __future__ import annotations
 import hashlib
 import json
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 #: version of the mesh content key.  v1 was the pre-spec era: an
 #: *unversioned* sha1 of a live mesh's axes/shape/platform blob.  v2 is
@@ -209,3 +209,42 @@ def cached_mesh(spec: Optional[MeshSpec]):
         mesh = spec.to_mesh()
         _MESH_CACHE[spec.mid] = mesh
     return mesh
+
+
+def default_mesh_space(device_count: Optional[int] = None,
+                       device_kind: str = "") -> List[MeshSpec]:
+    """Topology presets derived from the detected devices: the local
+    point, the flat data ring, and every 2-D ``data x model``
+    factorization of ``device_count`` — the points
+    ``sweep(mesh_space="auto")`` races.
+
+    ``device_count=None`` detects via ``jax.device_count()`` (lazy: a
+    module importing this one never pulls jax in).  Single-device hosts
+    get just the local point.  Factor pairs are ordered data-major
+    (``data >= model`` first), matching the usual batch-parallel bias;
+    every spec is buildable on this host by construction.
+    """
+    if device_count is None:
+        import jax
+        device_count = jax.device_count()
+    n = int(device_count)
+    out = [LOCAL]
+    if n <= 1:
+        return out
+    out.append(MeshSpec((("data", n),), device_kind))
+    pairs = []
+    for a in range(2, n + 1):
+        if n % a == 0 and n // a >= 2:
+            pairs.append((a, n // a))
+    # data-major order: (4,2) before (2,4) on 8 devices
+    for a, b in sorted(pairs, key=lambda p: (-p[0], p[1])):
+        out.append(MeshSpec((("data", a), ("model", b)), device_kind))
+    return out
+
+
+def __getattr__(name: str):
+    # PEP 562: DEFAULT_MESH_SPACE queries local devices, so it must not
+    # run at import time (importing meshspec would initialize jax)
+    if name == "DEFAULT_MESH_SPACE":
+        return default_mesh_space()
+    raise AttributeError(name)

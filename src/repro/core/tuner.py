@@ -85,6 +85,10 @@ class SweepReport:
     per_knob_total_s: Dict[str, float] = field(default_factory=dict)
     #: mesh.key() -> fused predicted total, every fusable mesh point
     per_mesh_total_s: Dict[str, float] = field(default_factory=dict)
+    #: segment kind -> {"n", "mean", "max"} of bound/measured over done
+    #: rows — the drift observability for the calibrated machine model
+    #: (a ratio > 1 means the certificate broke: see audit_soundness)
+    bound_tightness: Dict[str, Dict[str, float]] = field(default_factory=dict)
 
     def summary(self) -> str:
         s = (f"project={self.project} knob_points={self.n_knob_points} "
@@ -104,6 +108,11 @@ class SweepReport:
             kinds = ",".join(f"{k}:{v}" for k, v in
                              sorted(self.failure_kinds.items()))
             s += f" failure_kinds={kinds}"
+        if self.bound_tightness:
+            tight = ",".join(
+                f"{k}:mean={v['mean']:.2f}/max={v['max']:.2f}(n={v['n']})"
+                for k, v in sorted(self.bound_tightness.items()))
+            s += f" bound_tightness={tight}"
         return s
 
 
@@ -111,6 +120,7 @@ class ComParTuner:
     def __init__(self, cfg: ArchConfig, shape: ShapeConfig, mesh=None, *,
                  db: Optional[SweepDB] = None, project: Optional[str] = None,
                  mode: str = "new", executor: str = "dryrun",
+                 machine=None,
                  validate: bool = False, timeout_s: Optional[int] = 300):
         self.cfg = cfg
         self.shape = shape
@@ -121,10 +131,26 @@ class ComParTuner:
         name = project or f"{cfg.name}-{shape.name}"
         self.project = self.db.open_project(
             name, mode, {"arch": cfg.name, "shape": shape.name})
+        # ``machine``: the dryrun scorer's hardware model — None (the
+        # built-in v5e constants), "auto" (calibrate this host or load
+        # its cached profile from the DB's machine_cache), a
+        # MachineProfile, or a Hardware.  The calibrated view's name
+        # lands in the executor cache_tag, so calibrated and constant
+        # scores never share cache rows; bounds divide by the same view
+        # (Scheduler reads executor.hw), so pruning stays exact.
         if executor == "dryrun":
-            self.executor = DryRunExecutor(mesh, timeout_s=timeout_s)
+            hw = None
+            if machine is not None:
+                from repro.core.machine import resolve_machine
+                hw = resolve_machine(machine, self.db)
+            self.executor = DryRunExecutor(
+                self.mesh, timeout_s=timeout_s,
+                **({"hw": hw} if hw is not None else {}))
         elif executor == "wallclock":
-            self.executor = WallClockExecutor(mesh, timeout_s=timeout_s)
+            if machine is not None:
+                log.warning("machine= ignored: wallclock scores are "
+                            "measured, not modeled")
+            self.executor = WallClockExecutor(self.mesh, timeout_s=timeout_s)
         else:
             raise ValueError(executor)
         self.validate = validate
@@ -207,6 +233,12 @@ class ComParTuner:
         t0 = time.time()
         points = global_grid(global_space) if global_space is not None \
             else [knobs]
+        if isinstance(mesh_space, str):
+            if mesh_space != "auto":
+                raise ValueError(f"mesh_space={mesh_space!r}: the only "
+                                 f"string value is 'auto'")
+            from repro.core.meshspec import default_mesh_space
+            mesh_space = default_mesh_space()
         mesh_swept = mesh_space is not None
         mpoints: Optional[List[MeshSpec]] = None
         if mesh_swept:
@@ -223,13 +255,11 @@ class ComParTuner:
             if self.mesh is not None:
                 log.info("mesh_space sweeps its own points; the fixed "
                          "constructor mesh is not implicitly included")
-        if prune and boundary_costs:
-            # the lower-bound certificate covers the per-segment argmin
-            # only; under Viterbi fusion a locally-dominated combination
-            # can still win via cheaper boundary transitions
-            log.warning("prune disabled: exactness doesn't extend to "
-                        "boundary-cost (Viterbi) fusion")
-            prune = False
+        # prune + boundary_costs compose exactly now: the Scheduler
+        # stamps every job with the Viterbi pruning allowance
+        # (JobSpec.slack_s = (n_segs-1) * max single boundary cost), so
+        # a pruned combination provably cannot win any chain either —
+        # see IncumbentTracker.pruned and fusion.max_boundary_cost_s.
         if remote_url is not None:
             backend = "remote"
         if backend == "remote" and not remote_url:
@@ -287,7 +317,8 @@ class ComParTuner:
                       fallback=fallback, retry=retry,
                       transient_retries=transient_retries, prune=prune,
                       prune_margin=prune_margin, use_cache=use_cache,
-                      share_scores=share_scores, record_batch=record_batch)
+                      share_scores=share_scores, record_batch=record_batch,
+                      boundary_slack=prune and boundary_costs)
 
         # collect valid results per (mesh point, knob point, segment)
         by_rid = {(r["segment"], r["cid"]): r
@@ -312,6 +343,13 @@ class ComParTuner:
         rep.n_failed = counts.get("failed", 0)
         rep.n_invalid = counts.get("invalid", 0)
         rep.n_pruned = counts.get("pruned", 0)
+        rep.bound_tightness, violations = self._bound_tightness()
+        if violations:
+            # should be impossible (the bound is certified); seeing this
+            # in a summary means a floor overshoots — fix it before
+            # trusting prune=True
+            log.warning("bound soundness violated on %d done row(s): %s",
+                        len(violations), violations[:3])
 
         if mesh_swept:
             per_mesh = {mp.mid: knob_table(mp) for mp in mpoints}
@@ -332,6 +370,75 @@ class ComParTuner:
         return plan, rep
 
     # ------------------------------------------------------------------
+    def _bound_tightness(self):
+        """Recompute ``combo_lower_bound`` for every ``done`` row of
+        this project and compare against the recorded score.
+
+        Returns ``(table, violations)``: a per-segment-kind
+        ``{"n", "mean", "max"}`` table of bound/measured ratios (the
+        SweepReport's drift observability) and the rows where the bound
+        exceeded the measurement — which the certificate says must be
+        empty.  Cheap: no compiles, one DB scan.
+        """
+        from repro.core.cost_model import V5E, combo_lower_bound
+        hw = getattr(self.executor, "hw", V5E)
+        fixed_chips = getattr(self.executor, "n_chips", 1)
+        fixed_axes = dict(zip(self.mesh.axis_names,
+                              self.mesh.devices.shape)) \
+            if self.mesh is not None else None
+        segs = {s.name: s for s in fragment(self.cfg)}
+        stats: Dict[str, Dict[str, float]] = {}
+        violations = []
+        for r in self.db.results(self.project):
+            if r["status"] != "done" or not r["cost"]:
+                continue
+            seg = segs.get(r["segment"])
+            if seg is None:
+                continue
+            mesh = r["mesh"]
+            bound = combo_lower_bound(
+                self.cfg, self.shape, seg, r["combo"],
+                mesh.n_devices if mesh is not None else fixed_chips, hw,
+                knobs=r["knobs"],
+                mesh_axes=mesh.axis_sizes() if mesh is not None
+                else fixed_axes)
+            total = CostTerms.from_dict(r["cost"]).total_s
+            if total <= 0.0:
+                continue
+            ratio = bound / total
+            st = stats.setdefault(seg.kind, {"n": 0, "sum": 0.0, "max": 0.0})
+            st["n"] += 1
+            st["sum"] += ratio
+            st["max"] = max(st["max"], ratio)
+            if bound > total * (1.0 + 1e-9):
+                violations.append((r["segment"], r["cid"], bound, total))
+        table = {k: {"n": int(v["n"]), "mean": v["sum"] / v["n"],
+                     "max": v["max"]} for k, v in stats.items() if v["n"]}
+        return table, violations
+
+    def audit_soundness(self) -> Dict[str, Dict[str, float]]:
+        """Assert ``combo_lower_bound <= measured total_s`` for every
+        ``done`` row in this project; returns the per-kind tightness
+        table on success.
+
+        With the dryrun executor this checks the actual pruning
+        certificate (bound and score share ``executor.hw``).  With a
+        wallclock executor the bound models different units than the
+        measurement, so the check is skipped for assertion purposes
+        (pruning is force-disabled there anyway) and only the table is
+        returned.
+        """
+        table, violations = self._bound_tightness()
+        if violations and hasattr(self.executor, "hw"):
+            lines = "; ".join(
+                f"{seg}/{cid}: bound={b:.3e} > measured={t:.3e}"
+                for seg, cid, b, t in violations[:10])
+            raise AssertionError(
+                f"combo_lower_bound overshoots {len(violations)} done "
+                f"row(s) — pruning certificate broken: {lines}")
+        return table
+
+    # ------------------------------------------------------------------
     def _execute(self, segs: Sequence[Segment],
                  per_seg_combos: Dict[str, List[Combination]],
                  knob_points: Sequence[GlobalKnobs],
@@ -342,7 +449,8 @@ class ComParTuner:
                  remote_token: Optional[str], fallback: Optional[str],
                  retry, transient_retries: Optional[int], prune: bool,
                  prune_margin: float, use_cache: bool,
-                 share_scores: bool, record_batch: int):
+                 share_scores: bool, record_batch: int,
+                 boundary_slack: bool = False):
         """Score everything not already settled (Continue mode):
         Scheduler -> ScoringBackend -> Recorder, with bounded
         Scheduler-level transient retry rounds (``scheduler.drive``)."""
@@ -356,7 +464,7 @@ class ComParTuner:
             self.db, self.project, self.cfg, self.shape, self.mesh,
             self.executor, validate=self.validate,
             share_scores=share_scores, use_cache=use_cache,
-            shape_key=sk, mesh_key=mk)
+            shape_key=sk, mesh_key=mk, boundary_slack=boundary_slack)
         recorder = Recorder(
             self.db, self.project, rep, shape_key=sk, mesh_key=mk,
             use_cache=use_cache, batch=record_batch)

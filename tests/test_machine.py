@@ -1,0 +1,309 @@
+"""Calibrated machine model + tightened exact pruning.
+
+Invariants: a MachineProfile round-trips through JSON and the
+machine_cache with a stable content id; the Hardware view falls back to
+the built-in constants for anything unmeasured; ``combo_lower_bound``
+is monotone in the hardware constants, the remat clause and the
+microbatches knob; pruning with ``slack_s`` never changes a Viterbi
+argmin (brute-force over random chains); and end-to-end, a pinned
+compute-dominated profile prunes strictly more rows than the constant
+model while fusing a byte-identical plan — with every surviving row
+passing the soundness audit (bound <= measured score).
+"""
+import json
+import random
+
+import pytest
+from dataclasses import replace
+
+from repro.configs import get_arch, get_shape
+from repro.core import ComParTuner, SweepDB
+from repro.core.backends.base import IncumbentTracker, JobSpec
+from repro.core.combinator import Combination, GlobalKnobs
+from repro.core.cost_model import V5E, combo_lower_bound
+from repro.core.machine import (PROFILE_VERSION, MachineProfile, calibrate,
+                                hardware_from_profile, load_or_calibrate,
+                                profile_key, resolve_machine)
+from repro.core.meshspec import LOCAL, MeshSpec, default_mesh_space
+from repro.core.segment import fragment
+from repro.models.context import SegmentClause
+
+SPACE = {"remat": ("none", "full"), "kernel": ("xla",), "block_q": (16,),
+         "block_k": (16,), "scan_unroll": (1,), "mlstm_chunk": (16,)}
+
+#: hand-pinned profile: compute floor dominates every score (peak 5
+#: orders below v5e, bandwidths at the constant), so the bound is tight
+#: and the demonstration below is deterministic on any host.
+SLOW = MachineProfile(platform="synthetic", device_kind="slow-host",
+                      n_devices=1, peak_flops={"bfloat16": 1.0e9})
+
+
+def _combo(remat="none"):
+    return Combination("fsdp", frozenset(), SegmentClause(remat=remat))
+
+
+# --- MachineProfile content + cache ------------------------------------------
+
+def test_profile_roundtrip_and_pid():
+    p = MachineProfile(platform="cpu", device_kind="cpu", n_devices=2,
+                       peak_flops={"bfloat16": 1e10, "float32": 5e9},
+                       hbm_bw=1e9,
+                       collectives={"psum:data=2:1024":
+                                    {"s": 1e-4, "bytes": 1024.0,
+                                     "bytes_s": 1024.0 / 1e-4}})
+    q = MachineProfile.from_json(json.loads(json.dumps(p.to_json())))
+    assert q == p and q.pid == p.pid
+    assert p.key == profile_key("cpu", "cpu", 2) == "machine:v1:cpu:cpu:2"
+    # the pid is a content hash: any measured value moves it
+    assert replace(p, hbm_bw=2e9).pid != p.pid
+
+
+def test_machine_cache_persist_and_reload(monkeypatch):
+    db = SweepDB(":memory:")
+    prof = load_or_calibrate(db, tiny=True)
+    assert db.machine_get(prof.key) == prof.to_json()
+
+    # second resolve must be served from machine_cache, not re-measured
+    def boom(*a, **kw):
+        raise AssertionError("recalibrated despite a fresh cached profile")
+    monkeypatch.setattr("repro.core.machine.calibrate", boom)
+    again = load_or_calibrate(db, tiny=True)
+    assert again.pid == prof.pid
+
+
+def test_stale_profile_version_recalibrates():
+    db = SweepDB(":memory:")
+    prof = calibrate(tiny=True)
+    stale = dict(prof.to_json(), version=PROFILE_VERSION - 1)
+    db.machine_put(prof.key, "stale", stale)
+    fresh = load_or_calibrate(db, tiny=True)
+    assert fresh.version == PROFILE_VERSION
+    assert db.machine_get(prof.key)["version"] == PROFILE_VERSION
+
+
+def test_hardware_view_fallbacks():
+    hw = hardware_from_profile(SLOW)
+    assert hw.peak_flops == 1.0e9                  # measured
+    assert hw.hbm_bw == V5E.hbm_bw                 # unmeasured -> constant
+    assert hw.link_bw == V5E.link_bw
+    assert hw.name.startswith("cal1-synthetic-")
+    assert SLOW.pid[:8] in hw.name                 # cache-tag isolation
+    # best dtype on the ladder wins
+    two = replace(SLOW, peak_flops={"bfloat16": 1e9, "float32": 3e9})
+    assert hardware_from_profile(two).peak_flops == 3e9
+
+
+def test_resolve_machine_dispatch():
+    db = SweepDB(":memory:")
+    assert resolve_machine(None, db) is None
+    assert resolve_machine(V5E, db) is V5E
+    assert resolve_machine(SLOW, db).name == hardware_from_profile(SLOW).name
+    auto = resolve_machine("auto", db)
+    assert auto is not None and db.machine_get(auto_key(db)) is not None
+    with pytest.raises(ValueError):
+        resolve_machine(42, db)
+
+
+def auto_key(db):
+    import jax
+    devs = jax.devices()
+    return profile_key(jax.default_backend(),
+                       getattr(devs[0], "device_kind", "")
+                       or jax.default_backend(), len(devs))
+
+
+# --- mesh-topology presets ---------------------------------------------------
+
+def test_default_mesh_space():
+    assert default_mesh_space(1) == [LOCAL]
+    assert default_mesh_space(4) == [
+        LOCAL, MeshSpec.of(data=4), MeshSpec.of(data=2, model=2)]
+    keys = [m.key() for m in default_mesh_space(8)]
+    # data-major factor order: (4,2) before (2,4)
+    assert keys == ["local", "data8[any]", "data4xmodel2[any]",
+                    "data2xmodel4[any]"]
+    assert default_mesh_space(6, device_kind="tpu")[1] == \
+        MeshSpec.of("tpu", data=6)
+
+
+# --- bound structure ---------------------------------------------------------
+
+def _stack_seg(cfg):
+    return next(s for s in fragment(cfg) if s.kind == "stack")
+
+
+def test_bound_monotone_in_hardware():
+    cfg = get_arch("recurrentgemma-2b").smoke()
+    shape = get_shape("train_4k").smoke()
+    seg = _stack_seg(cfg)
+    slow = hardware_from_profile(SLOW)
+    for remat in ("none", "dots", "full"):
+        b_const = combo_lower_bound(cfg, shape, seg, _combo(remat), 1, V5E)
+        b_slow = combo_lower_bound(cfg, shape, seg, _combo(remat), 1, slow)
+        assert 0 < b_const < b_slow     # slower machine -> larger floor
+    # more chips can only lower the floor
+    assert combo_lower_bound(cfg, shape, seg, _combo(), 4, V5E) < \
+        combo_lower_bound(cfg, shape, seg, _combo(), 1, V5E)
+
+
+def test_bound_monotone_in_remat_and_microbatches():
+    cfg = get_arch("recurrentgemma-2b").smoke()
+    shape = get_shape("train_4k").smoke()
+    seg = _stack_seg(cfg)
+    b = {r: combo_lower_bound(cfg, shape, seg, _combo(r), 1, V5E)
+         for r in ("none", "dots", "full")}
+    assert b["none"] <= b["dots"] <= b["full"]     # full remat reruns fwd
+    # grad-accum re-streams the weights once per microbatch trip, so the
+    # traffic floor scales with the knob (memory-bound under V5E)
+    b1 = combo_lower_bound(cfg, shape, seg, _combo(), 1, V5E,
+                           knobs=GlobalKnobs(microbatches=1))
+    b4 = combo_lower_bound(cfg, shape, seg, _combo(), 1, V5E,
+                           knobs=GlobalKnobs(microbatches=4))
+    assert b4 > b1
+
+
+def test_collective_floor_needs_batch_sharding():
+    cfg = get_arch("recurrentgemma-2b").smoke()
+    shape = get_shape("train_4k").smoke()
+    seg = _stack_seg(cfg)
+    meshless = combo_lower_bound(cfg, shape, seg, _combo(), 4, V5E)
+    meshed = combo_lower_bound(cfg, shape, seg, _combo(), 4, V5E,
+                               mesh_axes={"data": 4})
+    assert meshed >= meshless           # adding a floor can only tighten
+
+
+# --- slack pruning is exact (brute force) ------------------------------------
+
+def _viterbi(options, trans):
+    """min over chains of sum(total) + sum(transition); returns cost."""
+    prev = {i: c[1] for i, c in enumerate(options[0])}
+    for si in range(1, len(options)):
+        cur = {}
+        for j, (_, tj) in enumerate(options[si]):
+            cur[j] = min(prev[i] + trans[si - 1][i][j] for i in prev) + tj
+        prev = cur
+    return min(prev.values())
+
+
+def test_slack_prune_never_changes_viterbi_argmin():
+    rng = random.Random(0)
+    for trial in range(200):
+        n_segs = rng.randint(2, 4)
+        b_max = rng.uniform(0.0, 0.5)
+        options = []                      # per seg: [(bound, total)]
+        for _ in range(n_segs):
+            opts = []
+            for _ in range(rng.randint(2, 4)):
+                total = rng.uniform(1.0, 3.0)
+                opts.append((total * rng.uniform(0.3, 1.0), total))
+            options.append(opts)
+        trans = [[[rng.uniform(0.0, b_max)
+                   for _ in options[s + 1]] for _ in options[s]]
+                 for s in range(n_segs - 1)]
+        slack = (n_segs - 1) * b_max
+
+        # emulate the engine: cheapest-bound-first, prune against the
+        # incumbent per segment with the slack allowance (margin 0)
+        jobs = sorted(((s, i) for s in range(n_segs)
+                       for i in range(len(options[s]))),
+                      key=lambda si: options[si[0]][si[1]][0])
+        tracker = IncumbentTracker(prune=True, prune_margin=0.0)
+        kept = [set() for _ in range(n_segs)]
+        for s, i in jobs:
+            bound, total = options[s][i]
+            job = JobSpec(f"{s}/{i}", None, None, segments=(str(s),),
+                          bound_s=bound, slack_s=slack)
+            if tracker.pruned(job):
+                continue
+            kept[s].add(i)
+            tracker.observe((str(s),), total)
+
+        assert all(kept), f"trial {trial}: a segment lost every option"
+        pruned_opts = [[options[s][i] for i in sorted(kept[s])]
+                       for s in range(n_segs)]
+        pruned_trans = [[[trans[s][i][j] for j in sorted(kept[s + 1])]
+                         for i in sorted(kept[s])]
+                        for s in range(n_segs - 1)]
+        full = _viterbi(options, trans)
+        survived = _viterbi(pruned_opts, pruned_trans)
+        assert survived == pytest.approx(full, rel=0, abs=1e-12), \
+            f"trial {trial}: pruning changed the chain argmin"
+
+
+# --- process backend start method --------------------------------------------
+
+def test_resolve_ctx_start_methods():
+    import multiprocessing as mp
+
+    from repro.core.backends.process import _resolve_ctx
+    assert _resolve_ctx("spawn").get_start_method() == "spawn"
+    auto = _resolve_ctx("auto").get_start_method()
+    if "forkserver" in mp.get_all_start_methods():
+        assert auto == "forkserver"
+    else:
+        assert auto == "spawn"
+
+
+# --- end to end: calibrated pruning ------------------------------------------
+
+@pytest.fixture(scope="module")
+def calibrated_vs_constant():
+    cfg = get_arch("recurrentgemma-2b").smoke()
+    shape = get_shape("train_4k").smoke()
+    out = {}
+    for label, machine in (("const", None), ("slow", SLOW)):
+        db = SweepDB(":memory:")
+        t = ComParTuner(cfg, shape, db=db, project="p", mode="new",
+                        executor="dryrun", machine=machine, timeout_s=120)
+        plan, rep = t.sweep(providers=["fsdp"], clause_space=SPACE,
+                            max_flags=0, prune=True, prune_margin=0.0)
+        ref = ComParTuner(cfg, shape, db=db, project="ref", mode="new",
+                          executor="dryrun", machine=machine, timeout_s=120)
+        ref_plan, ref_rep = ref.sweep(providers=["fsdp"], clause_space=SPACE,
+                                      max_flags=0, prune=False)
+        out[label] = (t, plan, rep, ref_plan, ref_rep)
+    return out
+
+
+def test_calibrated_prunes_strictly_more(calibrated_vs_constant):
+    _, _, r_const, _, _ = calibrated_vs_constant["const"]
+    _, _, r_slow, _, _ = calibrated_vs_constant["slow"]
+    assert r_slow.n_pruned > r_const.n_pruned
+    # pruned rows are compiles skipped, not rows lost
+    assert r_slow.n_scored < r_const.n_scored
+    assert r_slow.n_done + r_slow.n_pruned == r_const.n_done
+
+
+def test_pruned_plan_matches_exhaustive(calibrated_vs_constant):
+    for label in ("const", "slow"):
+        _, plan, _, ref_plan, _ = calibrated_vs_constant[label]
+        assert {k: c.cid for k, c in plan.segments.items()} == \
+            {k: c.cid for k, c in ref_plan.segments.items()}, label
+
+
+def test_soundness_audit_and_tightness(calibrated_vs_constant):
+    for label in ("const", "slow"):
+        t, _, rep, _, _ = calibrated_vs_constant[label]
+        table = t.audit_soundness()        # raises on any violation
+        assert rep.bound_tightness and set(table) == set(rep.bound_tightness)
+        for st in table.values():
+            assert 0.0 <= st["mean"] <= st["max"] <= 1.0 + 1e-9
+        assert "bound_tightness=" in rep.summary()
+    # the pinned slow profile must actually be the tighter model
+    t_c, _, rep_c, _, _ = calibrated_vs_constant["const"]
+    t_s, _, rep_s, _, _ = calibrated_vs_constant["slow"]
+    assert rep_s.bound_tightness["stack"]["max"] > \
+        rep_c.bound_tightness["stack"]["max"]
+
+
+def test_calibrated_scores_never_share_constant_cache(calibrated_vs_constant):
+    # same DB reuse happens per-profile only: the ref sweep resolves from
+    # cache under its own hardware tag, so scored-counts stay per-model
+    _, _, _, _, ref_const = calibrated_vs_constant["const"]
+    assert ref_const.n_cached > 0          # same-tag reuse works...
+    t_slow, _, _, _, _ = calibrated_vs_constant["slow"]
+    db = SweepDB(":memory:")
+    cross = ComParTuner(t_slow.cfg, t_slow.shape, db=db, project="x",
+                        mode="new", executor="dryrun", machine=SLOW,
+                        timeout_s=120)
+    assert cross.executor.cache_tag != "dryrun:tpu-v5e"  # ...cross-tag can't
