@@ -43,6 +43,17 @@ calibrated row must prune strictly more and compile strictly less, and
 BOTH rows must fuse plans byte-identical to their own unpruned
 references — harder pruning, still exact.
 
+With ``--kernel-axis`` two rows price the hierarchical kernel-schedule
+autotuner (``repro.kernels.autotune``): an 8-point tile/variant grid
+(``kernel`` x ``block_q`` x ``block_k``) is timed in isolation and only
+the top-2 surviving schedules per segment enter the outer
+cross-product.  ``engine-cold-kernelaxis`` asserts the outer compile
+count grows by at most 2 combos per affected segment over the no-axis
+baseline AND that pruning with the kernel-aware floor fuses the plan
+byte-identical to its unpruned reference; ``engine-warm-kernelaxis``
+re-runs against the populated ``kernel_cache`` and asserts ZERO kernel
+re-benchmarks and ZERO outer recompiles.
+
 With ``--mesh-space`` two rows sweep the topology axis
 (``mesh_space=[local, data2]`` — ``data1`` on single-device hosts) on
 the *selected* backend: ``engine-cold-meshaxis2x`` and
@@ -58,7 +69,7 @@ optimization, not an approximation) and reports speedups vs seed-style.
   PYTHONPATH=src python benchmarks/sweep_throughput.py [--quick]
       [--arch granite-8b] [--shape train_4k] [--workers N]
       [--backend thread|process|remote|both] [--assert-speedup X]
-      [--globals] [--chaos] [--mesh-space] [--calibrated]
+      [--globals] [--chaos] [--mesh-space] [--calibrated] [--kernel-axis]
 """
 from __future__ import annotations
 
@@ -83,7 +94,8 @@ def run(quick: bool = False, arch: str = "granite-8b",
         shape_name: str = "train_4k", workers: int = 0,
         backend: str = "thread", assert_speedup: float = 0.0,
         globals_axis: bool = False, mesh_axis: bool = False,
-        chaos: bool = False, calibrated: bool = False):
+        chaos: bool = False, calibrated: bool = False,
+        kernel_axis: bool = False):
     from repro.configs import get_arch, get_shape
     from repro.core.db import SweepDB
 
@@ -289,6 +301,59 @@ def run(quick: bool = False, arch: str = "granite-8b",
             rows.append(("prune-const-hw", t_cconst, repc))
             rows.append(("prune-calibrated-hw", t_ccal, reps))
 
+        if kernel_axis:
+            # the hierarchical kernel-schedule axis: an 8-point
+            # tile/variant grid tuned in isolation; only the top-2
+            # surviving schedules per segment reach the cross-product.
+            # Baseline is the same single-point space with no axis, in
+            # its own DB so compile counts are directly comparable.
+            kbase = {"remat": ("none",), "kernel": ("xla",),
+                     "block_q": (16,), "block_k": (16,),
+                     "scan_unroll": (1,), "mlstm_chunk": (16,)}
+            kgrid = {"kernel": ("xla", "pallas"), "block_q": (16, 32),
+                     "block_k": (16, 32)}
+            planb, repb, _ = _sweep(
+                SweepDB(os.path.join(tmp, "kernel-base.db")), "kernel-base",
+                cfg, shape, kbase, workers=workers, use_cache=True,
+                prune=True)
+            kdb = SweepDB(os.path.join(tmp, "kernel.db"))
+            plank, repk, t_kcold = _sweep(
+                kdb, "kernel-cold", cfg, shape, kbase, workers=workers,
+                use_cache=True, prune=True, kernel_space=kgrid,
+                kernel_top_k=2)
+            kt = repk.kernel_tuning
+            n_aff = sum(1 for d in kt["per_segment"].values()
+                        if d["kept"] < d["schedules"])
+            assert kt["n_variants"] >= 6 and kt["top_k"] == 2
+            assert repk.n_scored <= repb.n_scored + 2 * n_aff, \
+                (f"kernel axis over-compiled: {repk.n_scored} vs base "
+                 f"{repb.n_scored} + 2 x {n_aff} affected segments")
+            # exactness: pruning with the kernel-aware floor fuses the
+            # same plan as the unpruned reference (cache makes it cheap)
+            planr, _, _ = _sweep(
+                kdb, "kernel-ref", cfg, shape, kbase, workers=workers,
+                use_cache=True, prune=False, kernel_space=kgrid,
+                kernel_top_k=2)
+            assert plank.segments == planr.segments, \
+                "kernel-aware pruning changed the plan!"
+            plankw, repkw, t_kwarm = _sweep(
+                kdb, "kernel-warm", cfg, shape, kbase, workers=workers,
+                use_cache=True, prune=True, kernel_space=kgrid,
+                kernel_top_k=2)
+            assert repkw.kernel_tuning["n_timed"] == 0, \
+                "warm kernel_cache re-benchmarked a schedule"
+            assert repkw.n_scored == 0, \
+                "warm kernel-axis sweep recompiled something"
+            assert plankw.segments == plank.segments, \
+                "warm kernel-axis sweep changed the plan!"
+            print(f"# kernel axis: {kt['n_variants']} schedules "
+                  f"({kt['n_timed']} timed, {kt['n_cached']} cached), "
+                  f"top-2 kept on {n_aff} segment(s), compiles "
+                  f"{repk.n_scored} vs {repb.n_scored} base, "
+                  f"best {kt['per_op_best']}")
+            rows.append(("engine-cold-kernelaxis", t_kcold, repk))
+            rows.append(("engine-warm-kernelaxis", t_kwarm, repkw))
+
         if mesh_axis:
             # the topology axis, on the SELECTED backend: cold sweeps
             # both mesh points (MeshSpec wire format — process/remote
@@ -366,6 +431,13 @@ def main():
                          "vs a pinned slow-host machine profile; the "
                          "calibrated row must prune strictly more, compile "
                          "strictly less, and fuse the identical plan")
+    ap.add_argument("--kernel-axis", dest="kernel_axis",
+                    action="store_true",
+                    help="add cold+warm kernel-schedule axis rows: an "
+                         "8-point tile/variant grid tuned in isolation, "
+                         "top-2 schedules per segment; cold asserts <= 2 "
+                         "extra compiles per affected segment and exact "
+                         "pruning, warm asserts zero re-benchmarks")
     ap.add_argument("--mesh-space", dest="mesh_axis", action="store_true",
                     help="add cold+warm 2-point mesh/topology axis rows on "
                          "the selected backend (warm must recompile "
@@ -376,7 +448,7 @@ def main():
         workers=args.workers, backend=args.backend,
         assert_speedup=args.assert_speedup, globals_axis=args.globals_axis,
         mesh_axis=args.mesh_axis, chaos=args.chaos,
-        calibrated=args.calibrated)
+        calibrated=args.calibrated, kernel_axis=args.kernel_axis)
 
 
 if __name__ == "__main__":

@@ -76,7 +76,8 @@ class Scheduler:
                  use_cache: bool = True,
                  shape_key: Optional[str] = None,
                  mesh_key: Optional[str] = None,
-                 boundary_slack: bool = False):
+                 boundary_slack: bool = False,
+                 kernel_tuning=None):
         self.db = db
         self.project = project
         self.cfg = cfg
@@ -89,6 +90,10 @@ class Scheduler:
         # boundary-cost fusion is active: jobs carry the Viterbi pruning
         # allowance (JobSpec.slack_s) so prune=True stays exact under it
         self.boundary_slack = boundary_slack
+        # the kernel autotuner's verdict (autotune.KernelTuning): per-
+        # schedule certified kernel flops tighten each job's compute
+        # floor; None = no kernel axis, bounds unchanged
+        self.kernel_tuning = kernel_tuning
         # the cache keys the pipeline reads AND writes under — a caller
         # (the tuner) passes one pair so write and read can't desync
         self.shape_key = shape_key if shape_key is not None \
@@ -226,12 +231,16 @@ class Scheduler:
                     slack = (len(segs) - 1) * max_boundary_cost_s(
                         self.cfg, self.shape, n_chips, hw)
                     slack_memo[n_chips] = slack
+            kflops = self.kernel_tuning.floor_flops(
+                g.seg.name, g.combo.clause) \
+                if self.kernel_tuning is not None else 0.0
             work.jobs.append(JobSpec(
                 key, g.seg, g.combo, segments=tuple(sorted(g.scopes)),
                 bound_s=combo_lower_bound(self.cfg, self.shape, g.seg,
                                           g.combo, n_chips, hw,
                                           knobs=g.knobs,
-                                          mesh_axes=mesh_axes),
+                                          mesh_axes=mesh_axes,
+                                          kernel_flops=kflops),
                 signature=g.signature, eff_cid=g.eff_cid, knobs=g.knobs,
                 mesh=g.mesh, mesh_key=g.mesh_key, slack_s=slack))
         recorder.flush()

@@ -246,7 +246,8 @@ def _batch_shard_degree(cfg: ArchConfig, shape: ShapeConfig, segment,
 
 def combo_lower_bound(cfg: ArchConfig, shape: ShapeConfig, segment,
                       combo, n_chips: int = 1, hw: Hardware = V5E,
-                      knobs=None, mesh_axes=None) -> float:
+                      knobs=None, mesh_axes=None,
+                      kernel_flops: float = 0.0) -> float:
     """Certified roofline lower bound (seconds) on scoring
     (segment, combination) under one GlobalKnobs point and one mesh.
 
@@ -280,6 +281,18 @@ def combo_lower_bound(cfg: ArchConfig, shape: ShapeConfig, segment,
     axis.  ``mesh_axes`` is the declarative axis->size dict of the
     point being scored (from ``MeshSpec.axis_sizes()`` or a live mesh);
     omitting it simply drops the collective floor.
+
+    ``kernel_flops`` is the kernel autotuner's certified isolated flop
+    count for the exact schedule this combination's clause selects
+    (``repro.kernels.autotune`` — trip-count-exact HLO analysis of the
+    same lowering the segment program embeds, so it is >= the minimum
+    over measured variants and <= the program's own kernel flops).  It
+    is disjoint from ``fwd`` by construction — the projection-dot floor
+    deliberately omits attention-score/recurrence contractions — and is
+    charged exactly once (the forward kernel runs at least once on every
+    shape; the backward uses the reference vjp, and microbatching splits
+    the same total), so adding it keeps ``bound <= score`` exact.
+    ``0.0`` (unmeasured / no kernel axis) reproduces the old bound.
     """
     fwd = segment_forward_flops(cfg, shape, segment)
     if shape.kind != "train":
@@ -288,7 +301,8 @@ def combo_lower_bound(cfg: ArchConfig, shape: ShapeConfig, segment,
         mult = REMAT_FLOP_MULT.get(combo.clause.remat, 1.0)
     else:
         mult = 3.0                              # plain fwd + bwd
-    compute_s = fwd * mult / (n_chips * hw.peak_flops)
+    compute_s = (fwd * mult + max(0.0, kernel_flops)) \
+        / (n_chips * hw.peak_flops)
 
     itemsize = _itemsize(cfg.dtype)
     welems = segment_weight_elems(cfg, segment)

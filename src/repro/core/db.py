@@ -50,6 +50,17 @@ CREATE TABLE IF NOT EXISTS machine_cache (
     profile TEXT,                    -- MachineProfile JSON
     created REAL
 );
+CREATE TABLE IF NOT EXISTS kernel_cache (
+    key TEXT,                        -- autotune.cache_key(): versioned
+                                     --   kernel:v<N>:<tag>:<op>:<dims>
+    variant TEXT,                    -- canonical schedule key (k=v join)
+    status TEXT,                     -- done | failed
+    time_s REAL,
+    flops REAL,
+    error TEXT,
+    created REAL,
+    PRIMARY KEY (key, variant)
+);
 """
 
 
@@ -290,6 +301,33 @@ class SweepDB:
         self.conn.execute(
             "INSERT OR REPLACE INTO machine_cache VALUES (?,?,?,?)",
             (key, pid, json.dumps(profile), time.time()))
+        self.conn.commit()
+
+    # --- kernel-schedule microbenchmarks ------------------------------------
+    def kernel_get(self, key: str) -> Dict[str, Dict]:
+        """All measured variants under one (op, dims, tag) cache key:
+        variant key -> {"status", "time_s", "flops", "error"}.  Version
+        mismatches can't happen — the version lives in the key, so stale
+        rows are simply never addressed (machine_cache policy)."""
+        out: Dict[str, Dict] = {}
+        for variant, status, time_s, flops, error in self.conn.execute(
+                "SELECT variant, status, time_s, flops, error "
+                "FROM kernel_cache WHERE key=?", (key,)):
+            out[variant] = {"status": status,
+                            "time_s": float(time_s or 0.0),
+                            "flops": float(flops or 0.0),
+                            "error": error or ""}
+        return out
+
+    def kernel_put_many(self, key: str, entries: Dict[str, Dict]):
+        """Persist variant measurements; re-measurement replaces (the
+        newest timing wins, like machine_put)."""
+        now = time.time()
+        self.conn.executemany(
+            "INSERT OR REPLACE INTO kernel_cache VALUES (?,?,?,?,?,?,?)",
+            [(key, variant, e["status"], float(e.get("time_s") or 0.0),
+              float(e.get("flops") or 0.0), e.get("error", ""), now)
+             for variant, e in entries.items()])
         self.conn.commit()
 
     def cache_size(self) -> int:

@@ -89,6 +89,10 @@ class SweepReport:
     #: rows — the drift observability for the calibrated machine model
     #: (a ratio > 1 means the certificate broke: see audit_soundness)
     bound_tightness: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    #: the inner kernel sweep's observability (``sweep(kernel_space=...)``):
+    #: variants enumerated/timed/cache-hit/failed, top_k, per-op best
+    #: schedule, per-segment kept counts.  None = no kernel axis.
+    kernel_tuning: Optional[Dict] = None
 
     def summary(self) -> str:
         s = (f"project={self.project} knob_points={self.n_knob_points} "
@@ -113,6 +117,11 @@ class SweepReport:
                 f"{k}:mean={v['mean']:.2f}/max={v['max']:.2f}(n={v['n']})"
                 for k, v in sorted(self.bound_tightness.items()))
             s += f" bound_tightness={tight}"
+        if self.kernel_tuning:
+            kt = self.kernel_tuning
+            s += (f" kernel_tuning=variants:{kt['n_variants']},"
+                  f"timed:{kt['n_timed']},cached:{kt['n_cached']},"
+                  f"failed:{kt['n_failed']},top_k:{kt['top_k']}")
         return s
 
 
@@ -156,6 +165,10 @@ class ComParTuner:
         self.validate = validate
         #: cached ScoringBackends (warm process pools) — see _engine()
         self._engines: Dict[Tuple, object] = {}
+        #: the latest sweep's kernel-autotuner verdict (None = no kernel
+        #: axis) — _bound_tightness/audit_soundness recompute bounds with
+        #: the same per-schedule floors the Scheduler stamped on jobs
+        self._kernel_tuning = None
 
     # ------------------------------------------------------------------
     def sweep(self, providers: Optional[Sequence[str]] = None,
@@ -172,6 +185,7 @@ class ComParTuner:
               fallback: Optional[str] = None,
               retry=None,
               transient_retries: Optional[int] = None,
+              kernel_space=None, kernel_top_k: int = 2,
               prune: bool = False, prune_margin: float = 0.1,
               use_cache: bool = True, share_scores: bool = True,
               record_batch: int = 64) -> Tuple[Plan, SweepReport]:
@@ -222,6 +236,26 @@ class ComParTuner:
                           transient failures in-sweep before they are
                           recorded (default: the retry policy's
                           ``sweep_retries``, 1)
+        ``kernel_space``  the hierarchical kernel axis: ``"auto"`` (the
+                          built-in tile/variant grid) or a
+                          ``{field: values}`` grid over the kernel
+                          schedule fields (``kernel``/``block_q``/
+                          ``block_k``/``mlstm_chunk``).  The kernel
+                          autotuner times every (op, schedule) variant
+                          in isolation first (``kernel_cache``-resolved:
+                          repeat sweeps re-benchmark nothing), then the
+                          outer cross-product carries only the
+                          ``kernel_top_k`` cheapest schedules per
+                          segment — a T-schedule grid adds at most k
+                          combos per affected segment instead of xT
+                          compiles.  Kernel-space fields override the
+                          same fields of ``clause_space`` in the
+                          enumerated grid.  Default ``None`` = no inner
+                          sweep (today's flat behavior).
+        ``kernel_top_k``  surviving schedules per segment
+                          (``>= len(grid)`` keeps everything: the sweep
+                          is then byte-identical to an exhaustive clause
+                          sweep over the merged space)
         ``prune``         exact lower-bound pruning on/off
         ``prune_margin``  relative headroom the bound must clear
         ``use_cache``     persistent structural score cache on/off
@@ -281,7 +315,35 @@ class ComParTuner:
             prune = False
         providers = list(providers or all_providers())
         segs = fragment(self.cfg)
-        combos = enumerate_combinations(providers, clause_space,
+
+        # Hierarchical kernel axis: run the inner (op, schedule) sweep
+        # first, then enumerate the OUTER space over the merged grid and
+        # filter each segment down to its top-k surviving schedules.
+        # Filtering (instead of nested expansion) preserves enumeration
+        # order, so kernel_top_k >= len(grid) registers rows in exactly
+        # the order an exhaustive clause sweep would — argmin tie-breaks,
+        # and therefore fused plans, stay byte-identical.
+        tuning = None
+        space = clause_space
+        if kernel_space is not None:
+            from repro.kernels.autotune import (DEFAULT_KERNEL_SPACE,
+                                                tune_segments)
+            if isinstance(kernel_space, str):
+                if kernel_space != "auto":
+                    raise ValueError(f"kernel_space={kernel_space!r}: the "
+                                     f"only string value is 'auto'")
+                kernel_space = DEFAULT_KERNEL_SPACE
+            kspace = {k: tuple(v) for k, v in kernel_space.items()}
+            from repro.core.combinator import DEFAULT_CLAUSE_SPACE
+            space = dict(clause_space or DEFAULT_CLAUSE_SPACE)
+            space.update(kspace)
+            tuning = tune_segments(self.db, self.cfg, self.shape, segs,
+                                   space, self.executor,
+                                   top_k=kernel_top_k, use_cache=use_cache)
+            rep_kernel = tuning.report
+        self._kernel_tuning = tuning
+
+        combos = enumerate_combinations(providers, space,
                                         budget=budget, max_flags=max_flags)
         rep = SweepReport(
             self.project, n_combinations=0, n_knob_points=len(points),
@@ -291,7 +353,9 @@ class ComParTuner:
                 # charge the formula's rtl term for what is actually
                 # swept, not the field count of a fixed knobs instance
                 n_rtl=len(swept_knob_fields(global_space)),
-                n_d=len(clause_space or {}) or 6))
+                n_d=len(space or {}) or 6))
+        if tuning is not None:
+            rep.kernel_tuning = rep_kernel
 
         # Combinator: register every (segment, combination, knob point,
         # mesh point), one transaction.  Unswept mesh = None (bare row
@@ -300,7 +364,8 @@ class ComParTuner:
         for seg in segs:
             per_seg_combos[seg.name] = [
                 c for c in combos
-                if get_provider(c.provider).applicable(self.cfg, seg)]
+                if get_provider(c.provider).applicable(self.cfg, seg)
+                and (tuning is None or tuning.keeps(seg.name, c.clause))]
         reg: List[Tuple] = []
         for mp in (mpoints if mesh_swept else [None]):
             for kn in points:
@@ -311,7 +376,7 @@ class ComParTuner:
         self.db.register_many(self.project, reg)
 
         self._execute(segs, per_seg_combos, points, rep,
-                      mesh_points=mpoints,
+                      mesh_points=mpoints, kernel_tuning=tuning,
                       backend=backend, workers=workers,
                       remote_url=remote_url, remote_token=remote_token,
                       fallback=fallback, retry=retry,
@@ -396,12 +461,17 @@ class ComParTuner:
             if seg is None:
                 continue
             mesh = r["mesh"]
+            # rows recorded by a pre-kernel-axis sweep of the same
+            # project project to unmeasured schedules -> floor 0.0
+            kflops = self._kernel_tuning.floor_flops(
+                r["segment"], r["combo"].clause) \
+                if self._kernel_tuning is not None else 0.0
             bound = combo_lower_bound(
                 self.cfg, self.shape, seg, r["combo"],
                 mesh.n_devices if mesh is not None else fixed_chips, hw,
                 knobs=r["knobs"],
                 mesh_axes=mesh.axis_sizes() if mesh is not None
-                else fixed_axes)
+                else fixed_axes, kernel_flops=kflops)
             total = CostTerms.from_dict(r["cost"]).total_s
             if total <= 0.0:
                 continue
@@ -444,6 +514,7 @@ class ComParTuner:
                  knob_points: Sequence[GlobalKnobs],
                  rep: SweepReport, *,
                  mesh_points: Optional[Sequence[MeshSpec]],
+                 kernel_tuning=None,
                  backend: str, workers: int,
                  remote_url: Optional[str],
                  remote_token: Optional[str], fallback: Optional[str],
@@ -464,7 +535,8 @@ class ComParTuner:
             self.db, self.project, self.cfg, self.shape, self.mesh,
             self.executor, validate=self.validate,
             share_scores=share_scores, use_cache=use_cache,
-            shape_key=sk, mesh_key=mk, boundary_slack=boundary_slack)
+            shape_key=sk, mesh_key=mk, boundary_slack=boundary_slack,
+            kernel_tuning=kernel_tuning)
         recorder = Recorder(
             self.db, self.project, rep, shape_key=sk, mesh_key=mk,
             use_cache=use_cache, batch=record_batch)

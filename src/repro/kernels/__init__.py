@@ -1,3 +1,25 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Public kernels API: model-layout ops + the schedule autotuner.
+
+Callers import from here (``from repro import kernels as kops`` /
+``from repro.kernels import flash_attention``) instead of reaching into
+``repro.kernels.ops`` — the op wrappers and the autotune entry points
+are one surface, so the kernel axis and the kernels themselves version
+together.
+"""
+from repro.kernels.ops import (flash_attention, flash_decode,
+                               mlstm_chunkwise, rglru, rmsnorm)
+from repro.kernels.autotune import (DEFAULT_KERNEL_SPACE,
+                                    KERNEL_CACHE_VERSION, KernelTuning,
+                                    OP_FIELDS, cache_key, clause_schedule,
+                                    measure_op, op_variants, schedule_key,
+                                    segment_ops, tune_segments)
+
+__all__ = [
+    # ops (model-layout adapters, differentiable via custom_vjp)
+    "flash_attention", "flash_decode", "mlstm_chunkwise", "rglru",
+    "rmsnorm",
+    # autotuner (the hierarchical kernel-schedule axis)
+    "DEFAULT_KERNEL_SPACE", "KERNEL_CACHE_VERSION", "KernelTuning",
+    "OP_FIELDS", "cache_key", "clause_schedule", "measure_op",
+    "op_variants", "schedule_key", "segment_ops", "tune_segments",
+]

@@ -64,7 +64,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 
 def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
-                        block_q: int = 512, block_k: int = 512,
+                        block_q: int = 512, block_k: int = 1024,
                         interpret: bool = True):
     """q: (B,H,Sq,D); k/v: (B,KV,Sk,D) -> (B,H,Sq,D)."""
     B, H, Sq, D = q.shape

@@ -19,7 +19,7 @@ from repro.kernels.rmsnorm import rmsnorm_fwd
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    block_q: int = 512, block_k: int = 512,
+                    block_q: int = 512, block_k: int = 1024,
                     interpret: bool = True):
     """Model layout: q (B,S,H,D); k/v (B,S,KV,D) -> (B,S,H,D)."""
 
@@ -64,7 +64,7 @@ def flash_decode(q, k_cache, v_cache, pos, *, block_k: int = 1024,
                             interpret=interpret, return_lse=return_lse)
 
 
-def rglru(log_a, b, *, chunk: int = 128, interpret: bool = True):
+def rglru(log_a, b, *, chunk: int = 256, interpret: bool = True):
     """log_a, b: (B,S,dr) -> h (B,S,dr) f32."""
 
     @jax.custom_vjp

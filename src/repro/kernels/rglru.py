@@ -43,7 +43,7 @@ def _kernel(la_ref, b_ref, o_ref, h0_ref, *, chunk: int):
     h0_ref[...] = h[-1:]
 
 
-def rglru_fwd(log_a, b, *, chunk: int = 128, block_d: int = 128,
+def rglru_fwd(log_a, b, *, chunk: int = 256, block_d: int = 128,
               interpret: bool = True):
     """log_a, b: (B, S, dr) -> h: (B, S, dr), f32 math."""
     B, S, dr = log_a.shape

@@ -154,7 +154,7 @@ def attn_apply(p, x, cfg: ArchConfig, ctx: ModelContext, positions):
     q, k, v = _project_qkv(p, x, cfg, ctx, positions)
     cl = ctx.clause
     if cl.kernel == "pallas":
-        from repro.kernels import ops as kops
+        from repro import kernels as kops
         o = kops.flash_attention(
             q, k, v, causal=True, window=cfg.window_size,
             block_q=cl.block_q, block_k=cl.block_k, interpret=ctx.interpret)
@@ -281,7 +281,7 @@ def attn_decode(p, x1, cache, pos, cfg: ArchConfig, ctx: ModelContext):
                              jnp.minimum(pos, cache_len - 1), window=0,
                              upcast=ctx.clause.cache_upcast)
     elif ctx.clause.kernel == "pallas":
-        from repro.kernels import ops as kops
+        from repro import kernels as kops
         o = kops.flash_decode(q, k_cache, v_cache, pos,
                               block_k=ctx.clause.block_k,
                               interpret=ctx.interpret)

@@ -83,7 +83,7 @@ def rec_apply(p, x, cfg: ArchConfig, ctx: ModelContext):
     u, _ = causal_conv1d(u, p["conv"])
     log_a, b = _rglru_coeffs(p, u)
     if ctx.clause.kernel == "pallas":
-        from repro.kernels import ops as kops
+        from repro import kernels as kops
         h = kops.rglru(log_a, b, chunk=ctx.clause.mlstm_chunk,
                        interpret=ctx.interpret)
     else:

@@ -142,7 +142,7 @@ def mlstm_apply(p, x, cfg: ArchConfig, ctx: ModelContext):
     while S % c:
         c -= 1
     if ctx.clause.kernel == "pallas":
-        from repro.kernels import ops as kops
+        from repro import kernels as kops
         h = kops.mlstm_chunkwise(q, k, v, li, lf, chunk=c,
                                  interpret=ctx.interpret)
     else:

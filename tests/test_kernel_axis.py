@@ -1,0 +1,296 @@
+"""The hierarchical kernel-schedule axis (inner sweep level).
+
+Covers: pallas-vs-oracle numerics across the swept tile grid, the
+clause-default <-> op-signature round-trip (the skew regression), the
+versioned ``kernel_cache`` (round-trip, stale-version recalibration,
+warm sweeps re-benchmark nothing), and the exactness contract of the
+outer filter — ``kernel_top_k=len(grid)`` fuses a plan byte-identical
+to the exhaustive clause sweep, and ``prune=True`` with the
+kernel-aware floor never changes the plan.
+"""
+import dataclasses
+import inspect
+import json
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, get_shape
+from repro.core import ComParTuner, SweepDB
+from repro.core.executor import DryRunExecutor
+from repro.kernels import ops, ref
+from repro.kernels.autotune import (DEFAULT_KERNEL_SPACE,
+                                    KERNEL_CACHE_VERSION, KernelTuning,
+                                    OP_FIELDS, cache_key, clause_schedule,
+                                    measure_op, op_variants, schedule_key,
+                                    segment_ops)
+from repro.models.context import SegmentClause
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.key(key), shape).astype(dtype)
+
+
+def _plan_bytes(plan):
+    d = plan.to_json()
+    return json.dumps({"segments": d["segments"], "knobs": d["knobs"]},
+                      sort_keys=True).encode()
+
+
+# single-point base space + the swept kernel grid (T = 2*2*2 = 8)
+BASE = {"remat": ("none",), "kernel": ("xla",), "block_q": (16,),
+        "block_k": (16,), "scan_unroll": (1,), "mlstm_chunk": (16,)}
+KSPACE = {"kernel": ("xla", "pallas"), "block_q": (16, 32),
+          "block_k": (16, 32)}
+
+
+def _merged():
+    m = dict(BASE)
+    m.update(KSPACE)
+    return m
+
+
+def _ktuner(db, project):
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    return ComParTuner(cfg, shape, mesh=None, db=db, project=project,
+                       mode="new", executor="dryrun", timeout_s=120)
+
+
+def _ksweep(tuner, **kw):
+    return tuner.sweep(providers=["tensor_par", "fsdp"], max_flags=1, **kw)
+
+
+# --- numerics across the swept tile grid -------------------------------------
+
+@pytest.mark.parametrize("block_q,block_k",
+                         [(16, 16), (16, 32), (32, 16), (32, 64)])
+def test_flash_attention_tile_grid_allclose(block_q, block_k):
+    B, S, H, KV, D = 1, 64, 4, 2, 16
+    q = rand(1, (B, S, H, D))
+    k = rand(2, (B, S, KV, D))
+    v = rand(3, (B, S, KV, D))
+    out = ops.flash_attention(q, k, v, block_q=block_q, block_k=block_k)
+    expect = ref.flash_attention_ref(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                                     v.swapaxes(1, 2)).swapaxes(1, 2)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+def test_mlstm_tile_grid_allclose(chunk):
+    B, H, S, dh = 1, 2, 64, 16
+    q = rand(1, (B, H, S, dh)) * dh ** -0.5
+    k = rand(2, (B, H, S, dh))
+    v = rand(3, (B, H, S, dh))
+    li = rand(4, (B, H, S))
+    lf = -jax.nn.softplus(-rand(5, (B, H, S)))
+    out = ops.mlstm_chunkwise(q, k, v, li, lf, chunk=chunk)
+    expect = ref.mlstm_ref(q, k, v, li, lf)
+    np.testing.assert_allclose(out, expect, atol=5e-4, rtol=5e-3)
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+def test_rglru_tile_grid_allclose(chunk):
+    B, S, dr = 1, 64, 32
+    la = -jnp.abs(rand(1, (B, S, dr))) * 0.2
+    b = rand(2, (B, S, dr))
+    out = ops.rglru(la, b, chunk=chunk)
+    expect = ref.rglru_ref(la, b)
+    np.testing.assert_allclose(out, expect, atol=1e-5, rtol=1e-4)
+
+
+# --- clause defaults <-> op signatures (the skew regression) -----------------
+
+def test_clause_defaults_round_trip_op_signatures():
+    """An outer-space point omitting a tile field and an op invoked with
+    its signature default must land on the SAME schedule — the clause
+    defaults and the op defaults may never skew again."""
+    cl = SegmentClause()
+    d = lambda fn, name: inspect.signature(fn).parameters[name].default
+    assert d(ops.flash_attention, "block_q") == cl.block_q
+    assert d(ops.flash_attention, "block_k") == cl.block_k
+    assert d(ops.flash_decode, "block_k") == cl.block_k
+    assert d(ops.mlstm_chunkwise, "chunk") == cl.mlstm_chunk
+    assert d(ops.rglru, "chunk") == cl.mlstm_chunk
+    from repro.kernels.flash_attention import flash_attention_fwd
+    assert d(flash_attention_fwd, "block_q") == cl.block_q
+    assert d(flash_attention_fwd, "block_k") == cl.block_k
+    from repro.kernels.rglru import rglru_fwd
+    assert d(rglru_fwd, "chunk") == cl.mlstm_chunk
+
+
+def test_op_variants_fall_back_to_clause_defaults():
+    cl = SegmentClause()
+    for op, fields in OP_FIELDS.items():
+        variants = op_variants(op, {})
+        assert variants == [{f: getattr(cl, f) for f in fields}]
+
+
+def test_default_kernel_space_covers_every_tuned_field():
+    tuned = {f for fields in OP_FIELDS.values() for f in fields}
+    assert tuned == set(DEFAULT_KERNEL_SPACE)
+
+
+# --- schedule keys, dispatch-site counts, projection -------------------------
+
+def test_schedule_key_is_order_canonical():
+    a = schedule_key({"kernel": "xla", "block_q": 16})
+    b = schedule_key({"block_q": 16, "kernel": "xla"})
+    assert a == b == "block_q=16,kernel=xla"
+    cl = SegmentClause(kernel="xla", block_q=16)
+    assert clause_schedule(cl, ("kernel", "block_q")) == a
+
+
+def test_segment_ops_mirrors_dispatch_sites():
+    cfg = get_arch("granite-8b").smoke()
+    train = get_shape("train_4k").smoke()
+    decode = get_shape("decode_32k").smoke()
+    seg = types.SimpleNamespace(kind="stack", name="g0",
+                                pattern=("attn_g", "mlp"), repeats=2)
+    assert segment_ops(cfg, train, seg) == {"flash_attention": 2}
+    assert segment_ops(cfg, decode, seg) == {"flash_decode": 2}
+    # windowed decode takes the ring-buffer path — no kernel dispatch
+    windowed = dataclasses.replace(cfg, window_size=16)
+    assert segment_ops(windowed, decode, seg) == {}
+    # non-stack segments have no tuned ops
+    embed = types.SimpleNamespace(kind="embed", name="embed",
+                                  pattern=(), repeats=1)
+    assert segment_ops(cfg, train, embed) == {}
+    rec = types.SimpleNamespace(kind="stack", name="r0",
+                                pattern=("rec", "mlstm", "attn_l"), repeats=1)
+    assert segment_ops(cfg, train, rec) == \
+        {"rglru": 1, "mlstm_chunkwise": 1, "flash_attention": 1}
+
+
+def test_keeps_and_floor_project_the_clause():
+    kt = KernelTuning()
+    kt.fields["g0"] = ("block_k", "block_q", "kernel")
+    kept = SegmentClause(kernel="xla", block_q=16, block_k=16)
+    key = clause_schedule(kept, kt.fields["g0"])
+    kt.surviving["g0"] = {key}
+    kt.floors["g0"] = {key: 123.0}
+    assert kt.keeps("g0", kept)
+    assert kt.floor_flops("g0", kept) == 123.0
+    dropped = SegmentClause(kernel="pallas", block_q=16, block_k=16)
+    assert not kt.keeps("g0", dropped)
+    assert kt.floor_flops("g0", dropped) == 0.0
+    # untuned segments stay unrestricted with a trivially-sound floor
+    assert kt.keeps("other", dropped)
+    assert kt.floor_flops("other", dropped) == 0.0
+
+
+# --- kernel_cache: round-trip + stale-version recalibration ------------------
+
+def test_kernel_cache_round_trip_and_stale_version(tmp_path):
+    cfg = get_arch("granite-8b").smoke()
+    shape = get_shape("train_4k").smoke()
+    ex = DryRunExecutor(None)
+    space = {"kernel": ("xla", "pallas"), "block_q": (16,),
+             "block_k": (16, 32)}
+    db = SweepDB(str(tmp_path / "kc.db"))
+    res1, timed1, cached1 = measure_op(db, "flash_attention", cfg, shape,
+                                       space, ex)
+    assert timed1 == len(res1) == 4 and cached1 == 0
+    assert all(e["status"] == "done" for e in res1.values())
+    # second pass: every variant resolves from the cache, zero timed
+    res2, timed2, cached2 = measure_op(db, "flash_attention", cfg, shape,
+                                       space, ex)
+    assert timed2 == 0 and cached2 == 4
+    assert {k: e["time_s"] for k, e in res2.items()} == \
+        {k: e["time_s"] for k, e in res1.items()}
+    # stale-version rows are unaddressable: a db holding only v0 rows
+    # (as after a version bump) forces full re-measurement
+    db0 = SweepDB(str(tmp_path / "stale.db"))
+    key = cache_key("flash_attention", cfg, shape, ex.cache_tag)
+    old = key.replace(f"kernel:v{KERNEL_CACHE_VERSION}:", "kernel:v0:")
+    assert old != key
+    db0.kernel_put_many(old, res1)
+    res3, timed3, cached3 = measure_op(db0, "flash_attention", cfg, shape,
+                                       space, ex)
+    assert cached3 == 0 and timed3 == len(res3) == 4
+
+
+def test_kernel_cache_persists_failed_rows(tmp_path):
+    db = SweepDB(str(tmp_path / "kf.db"))
+    db.kernel_put_many("kernel:v1:t:op:d", {
+        "kernel=pallas": {"status": "failed", "error": "boom"},
+        "kernel=xla": {"status": "done", "time_s": 1.5, "flops": 2.0}})
+    got = db.kernel_get("kernel:v1:t:op:d")
+    assert got["kernel=pallas"]["status"] == "failed"
+    assert got["kernel=pallas"]["error"] == "boom"
+    assert got["kernel=xla"] == {"status": "done", "time_s": 1.5,
+                                 "flops": 2.0, "error": ""}
+
+
+# --- e2e: the kernel axis through the outer engine ---------------------------
+
+@pytest.fixture(scope="module")
+def kernel_axis_runs():
+    db = SweepDB(":memory:")
+    plan_ex, rep_ex = _ksweep(_ktuner(db, "exhaustive"),
+                              clause_space=_merged(), use_cache=True,
+                              prune=False)
+    plan_k, rep_k = _ksweep(_ktuner(db, "topk-all"), clause_space=BASE,
+                            kernel_space=KSPACE, kernel_top_k=8,
+                            use_cache=True, prune=False)
+    return db, plan_ex, rep_ex, plan_k, rep_k
+
+
+def test_top_k_full_grid_byte_identical_to_exhaustive(kernel_axis_runs):
+    _, plan_ex, rep_ex, plan_k, rep_k = kernel_axis_runs
+    assert _plan_bytes(plan_k) == _plan_bytes(plan_ex)
+    assert rep_k.n_combinations == rep_ex.n_combinations
+    assert rep_k.kernel_tuning is not None
+    assert rep_k.kernel_tuning["n_variants"] == 8
+    assert rep_ex.kernel_tuning is None
+
+
+def test_warm_kernel_cache_zero_rebenchmarks(kernel_axis_runs):
+    db, _, _, plan_k, _ = kernel_axis_runs
+    plan2, rep2 = _ksweep(_ktuner(db, "warm"), clause_space=BASE,
+                          kernel_space=KSPACE, kernel_top_k=8,
+                          use_cache=True, prune=False)
+    assert rep2.kernel_tuning["n_timed"] == 0
+    assert rep2.kernel_tuning["n_cached"] == 8
+    assert rep2.n_scored == 0          # outer score cache is warm too
+    assert _plan_bytes(plan2) == _plan_bytes(plan_k)
+
+
+def test_top_k_restricts_outer_rows(kernel_axis_runs):
+    db, _, rep_ex, _, _ = kernel_axis_runs
+    plan, rep = _ksweep(_ktuner(db, "topk2"), clause_space=BASE,
+                        kernel_space=KSPACE, kernel_top_k=2,
+                        use_cache=True, prune=False)
+    kt = rep.kernel_tuning
+    assert kt["top_k"] == 2
+    affected = [s for s, d in kt["per_segment"].items() if d["kept"] == 2]
+    assert affected                     # at least one tuned stack segment
+    for d in kt["per_segment"].values():
+        assert d["schedules"] == 8 and d["kept"] == 2
+    assert rep.n_combinations < rep_ex.n_combinations
+    # the surviving plan picks a schedule the exhaustive sweep also saw
+    assert plan.segments
+
+
+def test_prune_with_kernel_floor_byte_identical():
+    db = SweepDB(":memory:")
+    plan_ref, _ = _ksweep(_ktuner(db, "unpruned"), clause_space=BASE,
+                          kernel_space=KSPACE, kernel_top_k=8,
+                          use_cache=True, prune=False)
+    pruned = _ktuner(db, "pruned")
+    plan_p, rep_p = _ksweep(pruned, clause_space=BASE, kernel_space=KSPACE,
+                            kernel_top_k=8, use_cache=True, prune=True)
+    assert _plan_bytes(plan_p) == _plan_bytes(plan_ref)
+    # every bound (with its kernel floor) certifies under the measurement
+    tightness = pruned.audit_soundness()
+    assert tightness
+
+
+def test_kernel_space_string_validation():
+    t = _ktuner(SweepDB(":memory:"), "bad")
+    with pytest.raises(ValueError):
+        t.sweep(providers=["fsdp"], clause_space=BASE,
+                kernel_space="fastest", max_flags=0)
