@@ -54,6 +54,16 @@ byte-identical to its unpruned reference; ``engine-warm-kernelaxis``
 re-runs against the populated ``kernel_cache`` and asserts ZERO kernel
 re-benchmarks and ZERO outer recompiles.
 
+With ``--static`` two rows price the static analyzer
+(``repro.analysis``) on a space seeded with provably-invalid points:
+``invalid-space-lint-off`` dispatches every point (the bad ones each
+cost a compile attempt and land as ``failed`` rows),
+``invalid-space-lint-strict`` rejects them pre-dispatch as ``static``
+rows.  The strict row must reject a nonzero number of points, strictly
+reduce failed dispatches, and fuse a plan byte-identical to the
+unlinted run — the lint only ever removes points the compiler would
+have rejected anyway.
+
 With ``--mesh-space`` two rows sweep the topology axis
 (``mesh_space=[local, data2]`` — ``data1`` on single-device hosts) on
 the *selected* backend: ``engine-cold-meshaxis2x`` and
@@ -70,6 +80,7 @@ optimization, not an approximation) and reports speedups vs seed-style.
       [--arch granite-8b] [--shape train_4k] [--workers N]
       [--backend thread|process|remote|both] [--assert-speedup X]
       [--globals] [--chaos] [--mesh-space] [--calibrated] [--kernel-axis]
+      [--static]
 """
 from __future__ import annotations
 
@@ -95,7 +106,7 @@ def run(quick: bool = False, arch: str = "granite-8b",
         backend: str = "thread", assert_speedup: float = 0.0,
         globals_axis: bool = False, mesh_axis: bool = False,
         chaos: bool = False, calibrated: bool = False,
-        kernel_axis: bool = False):
+        kernel_axis: bool = False, static: bool = False):
     from repro.configs import get_arch, get_shape
     from repro.core.db import SweepDB
 
@@ -354,6 +365,43 @@ def run(quick: bool = False, arch: str = "granite-8b",
             rows.append(("engine-cold-kernelaxis", t_kcold, repk))
             rows.append(("engine-warm-kernelaxis", t_kwarm, repkw))
 
+        if static:
+            # the static analyzer as a throughput lever: a space seeded
+            # with provably-invalid points (pallas block_q=24 on S=32,
+            # microbatches=3 on B=4) swept with checks off (every bad
+            # point costs a compile attempt -> failed row) vs strict
+            # (rejected pre-dispatch as "static" rows, zero compile
+            # attempts).  Same project name in both DBs so the fused
+            # plans — meta included — must be byte-identical: the lint
+            # only ever removes points the compiler would have rejected.
+            import json as _json
+            sspace = {"remat": ("none",), "kernel": ("xla", "pallas"),
+                      "block_q": (16, 24), "block_k": (32,),
+                      "scan_unroll": (1,), "mlstm_chunk": (16,)}
+            sglobals = {"microbatches": (1, 3)}
+            plan_off, rep_off, t_soff = _sweep(
+                SweepDB(os.path.join(tmp, "static-off.db")), "static",
+                cfg, shape, sspace, workers=workers, use_cache=True,
+                global_space=sglobals, static_checks="off")
+            plan_st, rep_st, t_strict = _sweep(
+                SweepDB(os.path.join(tmp, "static-strict.db")), "static",
+                cfg, shape, sspace, workers=workers, use_cache=True,
+                global_space=sglobals, static_checks="strict")
+            assert rep_st.n_static > 0, \
+                "strict linting rejected nothing on a seeded-invalid space"
+            assert rep_st.n_failed < rep_off.n_failed, \
+                (f"strict did not reduce dispatched failures: "
+                 f"{rep_st.n_failed} vs {rep_off.n_failed}")
+            assert _json.dumps(plan_st.to_json(), sort_keys=True) == \
+                _json.dumps(plan_off.to_json(), sort_keys=True), \
+                "static checks changed the fused plan!"
+            print(f"# static: {rep_st.n_static} points rejected "
+                  f"pre-dispatch ({dict(sorted(rep_st.static_rules.items()))}),"
+                  f" failed {rep_off.n_failed} -> {rep_st.n_failed}, "
+                  f"plan byte-identical")
+            rows.append(("invalid-space-lint-off", t_soff, rep_off))
+            rows.append(("invalid-space-lint-strict", t_strict, rep_st))
+
         if mesh_axis:
             # the topology axis, on the SELECTED backend: cold sweeps
             # both mesh points (MeshSpec wire format — process/remote
@@ -443,12 +491,19 @@ def main():
                          "the selected backend (warm must recompile "
                          "nothing); multi-device points need "
                          "XLA_FLAGS=--xla_force_host_platform_device_count")
+    ap.add_argument("--static", action="store_true",
+                    help="add invalid-space-lint-off/-strict rows: a sweep "
+                         "seeded with provably-invalid points run with "
+                         "static checks off vs strict; strict must reject "
+                         "points pre-dispatch (n_static>0), reduce failed "
+                         "rows, and fuse the byte-identical plan")
     args = ap.parse_args()
     run(quick=args.quick, arch=args.arch, shape_name=args.shape,
         workers=args.workers, backend=args.backend,
         assert_speedup=args.assert_speedup, globals_axis=args.globals_axis,
         mesh_axis=args.mesh_axis, chaos=args.chaos,
-        calibrated=args.calibrated, kernel_axis=args.kernel_axis)
+        calibrated=args.calibrated, kernel_axis=args.kernel_axis,
+        static=args.static)
 
 
 if __name__ == "__main__":

@@ -106,6 +106,15 @@ def main(backend: str = "thread", remote_url: str = None,
     print("\nfused plan (knobs chosen by the sweep, not supplied):")
     print(plan2.describe())
 
+    # certify + persist the winner: the saved JSON is what you'd ship to
+    # a training job, and what the lint CLI re-checks in CI
+    #   python -m repro.analysis.lint /tmp/compar_sweep_plan.json
+    diags = plan2.lint(cfg, shape)
+    assert not diags, f"fused plan failed its own lint: {diags}"
+    plan_path = os.path.join(tempfile.gettempdir(), "compar_sweep_plan.json")
+    plan2.save(plan_path)
+    print(f"fused plan written to {plan_path} (lint: clean)")
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()

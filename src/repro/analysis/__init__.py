@@ -1,0 +1,38 @@
+"""Static validity analysis for sweep points and fused plans (PlanLint).
+
+ComPar's promise is "the best parallel code possible while maintaining
+the program's validity" — but until now every validity mechanism was
+dynamic: the black-box numerics check pays a real forward pass, and a
+divisibility mistake (microbatch split, pallas tile, mesh axis) pays a
+full compile — or a spawned worker — to discover the point was never
+viable.  This package lints sweep points *without compiling anything*:
+
+* :func:`analyze_point` — rule-based diagnostics for one
+  (combination, knobs, mesh) sweep point against one or more segments.
+* :func:`analyze_plan` — certify a fused plan post-fusion (per-segment
+  point lint + cross-segment boundary coherence).
+* :func:`lint_schedule` — the kernel-schedule subset, shared with the
+  kernel autotuner (``kernels/autotune.py``) so statically-broken tile
+  variants are rejected before their isolated compile.
+
+Soundness contract: every ``error``-severity diagnostic marks a point
+that *provably* fails when compiled (or an unsatisfiable mesh) — that is
+what lets ``sweep(static_checks="strict")`` drop them without changing
+any fused plan.  Anything merely suspicious (silent chunk clamping,
+sharding fallback to replication, low-precision accumulation) is a
+``warn`` and never drops a point.
+
+CLI: ``python -m repro.analysis.lint <plan.json|sweep.json>``.
+"""
+from repro.analysis.diagnostics import Diagnostic, errors, format_diagnostics
+from repro.analysis.planlint import analyze_plan
+from repro.analysis.rules import analyze_point, lint_schedule
+
+__all__ = [
+    "Diagnostic",
+    "analyze_plan",
+    "analyze_point",
+    "errors",
+    "format_diagnostics",
+    "lint_schedule",
+]

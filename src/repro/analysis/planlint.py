@@ -1,0 +1,79 @@
+"""Plan-level lint: certify a fused plan post-fusion.
+
+Per-segment, a fused plan is just a set of sweep points, so every
+point-level rule applies (``analyze_point`` with the plan's knobs and
+chosen mesh).  The genuinely cross-segment rule lives here:
+
+``boundary-reshard``  adjacent segments whose resolved residual-stream
+                  partitions differ force a resharding at the segment
+                  boundary.  ``fuse`` in per-segment-argmin mode never
+                  priced that transfer (``boundary_costs=False``), so
+                  the plan's predicted total silently omits a real
+                  collective — a Viterbi-fused plan
+                  (``meta["fusion"] == "viterbi-boundary"``) priced it
+                  and is exempt.                                  [warn]
+``missing-segment``  the plan carries no combination for a segment of
+                  this config; ``build_contexts`` will substitute
+                  another segment's combination (loudly).         [warn]
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.diagnostics import ERROR, WARN, Diagnostic
+from repro.analysis.rules import analyze_point, residual_pspec
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.plan import Plan
+from repro.core.segment import fragment
+
+
+def analyze_plan(cfg: ArchConfig, shape: ShapeConfig, plan: Plan, *,
+                 trace: bool = True,
+                 check_devices: bool = False) -> List[Diagnostic]:
+    """Certify a fused plan: point-level lint of every segment's
+    combination under the plan's knobs/mesh, plus the cross-segment
+    boundary-coherence rule.  ``trace`` (default on — a plan has few
+    segments) enables the abstract-trace rules."""
+    segs = fragment(cfg)
+    diags: List[Diagnostic] = []
+    for seg in segs:
+        combo = plan.segments.get(seg.name)
+        if combo is None:
+            diags.append(Diagnostic(
+                "missing-segment", WARN,
+                f"plan has no combination for segment {seg.name!r}: "
+                f"build_contexts will substitute one",
+                segment=seg.name))
+            continue
+        diags += analyze_point(cfg, shape, combo, knobs=plan.knobs,
+                               mesh=plan.mesh, segments=(seg,),
+                               check_devices=check_devices, trace=trace)
+    diags += _rule_boundaries(cfg, shape, plan)
+    diags.sort(key=lambda d: (d.severity != ERROR,))
+    return diags
+
+
+def _rule_boundaries(cfg: ArchConfig, shape: ShapeConfig,
+                     plan: Plan) -> List[Diagnostic]:
+    mesh = plan.mesh
+    if mesh is None or mesh.is_local:
+        return []                    # meshless: every partition is trivial
+    if plan.meta.get("fusion") == "viterbi-boundary":
+        return []                    # boundary costs were priced in
+    axis_sizes = mesh.axis_sizes()
+    chain = [(s, plan.segments[s.name]) for s in fragment(cfg)
+             if s.name in plan.segments]
+    out: List[Diagnostic] = []
+    for (sa, ca), (sb, cb) in zip(chain, chain[1:]):
+        pa = residual_pspec(cfg, shape, ca, sa, axis_sizes)
+        pb = residual_pspec(cfg, shape, cb, sb, axis_sizes)
+        if pa != pb:
+            out.append(Diagnostic(
+                "boundary-reshard", WARN,
+                f"residual stream resharded at {sa.name}->{sb.name}: "
+                f"{pa} vs {pb}, unpriced under per-segment-argmin "
+                f"fusion (sweep with boundary_costs=True to price it)",
+                segment=sb.name,
+                evidence={"from": sa.name, "to": sb.name,
+                          "pspec_from": repr(pa), "pspec_to": repr(pb)}))
+    return out

@@ -1,0 +1,383 @@
+"""Point-level lint rules: one sweep point, zero compiles.
+
+Every rule mirrors a *verified* failure (or degradation) site of this
+codebase — the rule ids below name the site they model:
+
+``microbatch``    ``timer._with_microbatches`` raises when the global
+                  batch is not divisible by ``knobs.microbatches`` —
+                  and training wraps EVERY segment in it.        [error]
+``attn-tile``     ``flash_attention_fwd`` asserts ``Sq % block_q == 0
+                  and Sk % block_k == 0`` after clamping blocks to the
+                  sequence length.                               [error]
+``decode-tile``   ``flash_decode_fwd`` asserts ``Smax % block_k == 0``
+                  after clamping.  Only an error on the path that
+                  provably reaches the kernel (full-causal decode,
+                  ``decode_shardmap=False``); the shardmap gate is
+                  data-dependent, so under it this demotes to a warn.
+                                                          [error|warn]
+``mesh-devices``  ``MeshSpec.check_local`` raises MeshUnsatisfiable
+                  when this host lacks the devices.  Gated by
+                  ``check_devices`` — only local backends know the
+                  scoring host's device count.                   [error]
+``trace``         the abstract trace (``jax.eval_shape`` — the same
+                  tracing ``jit.lower`` performs, no compile) raised;
+                  the real compile deterministically raises too.
+                  Gated by ``trace=True``.                       [error]
+``chunk-clamp``   mLSTM/RG-LRU chunk lengths are silently walked down
+                  to a divisor of the sequence (``_clamp_chunk``) — the
+                  swept value is not the executed value.          [warn]
+``attn-chunk-fallback``  ``chunked_attention`` silently falls back to
+                  naive full-matrix attention when the q-chunk does not
+                  divide the sequence.                            [warn]
+``shard-fallback``  ``Rules._resolve_one`` silently replicates a dim
+                  whose mapped mesh axes fail divisibility.       [warn]
+``donate-unshaped``  a donated buffer whose shape/dtype matches no
+                  output cannot be reused in-place (XLA warns and
+                  copies).  Gated by ``trace=True``.              [warn]
+``dtype-flow``    low-precision accumulation hazards: bf16 optimizer
+                  state under ``opt_state_dtype``, bf16 KV-cache reads
+                  with ``cache_upcast=False``.                    [warn]
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.diagnostics import ERROR, WARN, Diagnostic
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.combinator import Combination, GlobalKnobs
+from repro.core.meshspec import MeshSpec, MeshUnsatisfiable
+from repro.core.segment import Segment, fragment
+
+
+def _logical_dims(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, int]:
+    """Canonical tensor dim per logical axis name — what the provider
+    mappings are resolved against when no concrete tensor is at hand."""
+    return {
+        "batch": shape.global_batch,
+        "seq": shape.seq_len,
+        "kv_seq": shape.seq_len,
+        "embed": cfg.d_model,
+        "vocab": cfg.vocab_size,
+        "heads": cfg.num_heads,
+        "kv_heads": cfg.num_kv_heads,
+        "ffn": cfg.d_ff,
+        "expert_ffn": cfg.d_ff,
+        "experts": cfg.num_experts,
+        "rnn": int(cfg.expand_factor * cfg.d_model),
+    }
+
+
+def _axis_sizes(mesh) -> Dict[str, int]:
+    """Normalize a mesh argument (MeshSpec | live jax.Mesh | None) to
+    ``{axis name: size}`` — the only mesh content any rule needs."""
+    if mesh is None:
+        return {}
+    if isinstance(mesh, MeshSpec):
+        return mesh.axis_sizes()
+    return dict(zip(mesh.axis_names, (int(d) for d in mesh.devices.shape)))
+
+
+def resolver(mapping: Dict[str, object], axis_sizes: Dict[str, int]):
+    """A ``Rules`` instance resolving against declarative axis sizes —
+    no live mesh needed.  ``Rules.pspec``/``_resolve_one`` only consult
+    ``mapping`` and ``axis_sizes``, so this IS the production resolution
+    (not a reimplementation that could drift)."""
+    from repro.runtime.sharding import Rules, _as_candidates
+    r = Rules.__new__(Rules)
+    r.mapping = {k: _as_candidates(v) for k, v in (mapping or {}).items()}
+    r.mesh = None
+    r.axis_sizes = dict(axis_sizes)
+    return r
+
+
+def residual_pspec(cfg: ArchConfig, shape: ShapeConfig, combo: Combination,
+                   seg: Segment, axis_sizes: Dict[str, int]):
+    """The resolved partition of the residual stream entering/leaving
+    ``seg`` under ``combo`` — the cross-segment boundary contract."""
+    from repro.core.providers import get_provider
+    mapping = get_provider(combo.provider).mapping(
+        cfg, axis_sizes, combo.flags, seg)
+    r = resolver(mapping, axis_sizes)
+    if shape.kind == "decode":
+        axes = ("batch", "embed")
+        dims = (shape.global_batch, cfg.d_model)
+    else:
+        axes = ("batch", "seq", "embed")
+        dims = (shape.global_batch, shape.seq_len, cfg.d_model)
+    return tuple(r.pspec(axes, dims))
+
+
+def _clamp_chunk(chunk: int, S: int) -> int:
+    c = min(int(chunk), S)
+    while S % c:
+        c -= 1
+    return c
+
+
+# --- kernel-schedule subset (shared with kernels/autotune.py) ---------------
+
+def lint_schedule(op: str, fields: Dict[str, object], cfg: ArchConfig,
+                  shape: ShapeConfig) -> List[Diagnostic]:
+    """Lint one (op, schedule) variant of the kernel autotuner's grid.
+
+    The isolated op programs (``autotune._op_program``) call the kernels
+    directly, so the tile-divisibility asserts fire unconditionally —
+    errors here are sound for the autotuner's pre-compile rejection."""
+    out: List[Diagnostic] = []
+    S = shape.seq_len
+    kernel = fields.get("kernel", "xla")
+    if op == "flash_attention":
+        if kernel == "pallas":
+            for f in ("block_q", "block_k"):
+                b = min(int(fields[f]), S)
+                if S % b:
+                    out.append(Diagnostic(
+                        "attn-tile", ERROR,
+                        f"seq_len {S} not divisible by {f}={fields[f]} "
+                        f"(clamped to {b}): flash_attention asserts",
+                        evidence={"seq_len": S, f: int(fields[f]),
+                                  "clamped": b}))
+        else:
+            bq = int(fields.get("block_q", 512))
+            if S > bq and S % bq:
+                out.append(Diagnostic(
+                    "attn-chunk-fallback", WARN,
+                    f"q_chunk {bq} does not divide seq_len {S}: "
+                    f"chunked_attention silently falls back to naive "
+                    f"full-matrix attention",
+                    evidence={"seq_len": S, "block_q": bq}))
+    elif op == "flash_decode" and kernel == "pallas":
+        bk = min(int(fields["block_k"]), S)
+        if S % bk:
+            out.append(Diagnostic(
+                "decode-tile", ERROR,
+                f"cache length {S} not divisible by block_k="
+                f"{fields['block_k']} (clamped to {bk}): flash_decode "
+                f"asserts",
+                evidence={"cache_len": S, "block_k": int(fields["block_k"]),
+                          "clamped": bk}))
+    elif op in ("mlstm_chunkwise", "rglru") and kernel == "pallas":
+        c = int(fields.get("mlstm_chunk", 256))
+        eff = _clamp_chunk(c, S)
+        if eff != min(c, S):
+            out.append(Diagnostic(
+                "chunk-clamp", WARN,
+                f"mlstm_chunk {c} silently clamped to {eff} "
+                f"(largest divisor of seq_len {S})",
+                evidence={"seq_len": S, "mlstm_chunk": c, "effective": eff}))
+    return out
+
+
+# --- per-point rules --------------------------------------------------------
+
+def _rule_microbatch(shape, knobs) -> List[Diagnostic]:
+    if shape.kind != "train" or knobs is None:
+        return []
+    mb = knobs.microbatches
+    if mb > 1 and shape.global_batch % mb:
+        # _with_microbatches wraps every train segment program, so the
+        # point fails on all of them — one global diagnostic
+        return [Diagnostic(
+            "microbatch", ERROR,
+            f"global_batch {shape.global_batch} not divisible by "
+            f"microbatches={mb}: the gradient-accumulation split raises",
+            evidence={"global_batch": shape.global_batch,
+                      "microbatches": mb})]
+    return []
+
+
+def _rule_tiles(cfg, shape, combo, seg) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    if seg.kind != "stack":
+        return out
+    cl = combo.clause
+    S = shape.seq_len
+    if seg.has_attn and shape.kind in ("train", "prefill"):
+        for d in lint_schedule(
+                "flash_attention",
+                {"kernel": cl.kernel, "block_q": cl.block_q,
+                 "block_k": cl.block_k}, cfg, shape):
+            d.segment = seg.name
+            out.append(d)
+    if seg.has_attn and shape.kind == "decode" and not cfg.window_size:
+        if cl.kernel == "pallas":
+            for d in lint_schedule(
+                    "flash_decode",
+                    {"kernel": cl.kernel, "block_k": cl.block_k},
+                    cfg, shape):
+                d.segment = seg.name
+                if cl.decode_shardmap:
+                    # the shardmap gate (attn_decode) is data-dependent
+                    # (needs the cache's seq dim actually sharded), so
+                    # the kernel is only *maybe* reached — not provable
+                    d.severity = WARN
+                    d.message += (" (decode_shardmap=True may bypass "
+                                  "the kernel; not provably fatal)")
+                out.append(d)
+    if seg.has_recurrent and shape.kind in ("train", "prefill") \
+            and cl.kernel == "pallas":
+        for d in lint_schedule(
+                "mlstm_chunkwise",
+                {"kernel": cl.kernel, "mlstm_chunk": cl.mlstm_chunk},
+                cfg, shape):
+            d.segment = seg.name
+            out.append(d)
+    return out
+
+
+def _rule_mesh_devices(mesh) -> List[Diagnostic]:
+    if not isinstance(mesh, MeshSpec) or mesh.is_local:
+        return []
+    try:
+        mesh.check_local()
+    except MeshUnsatisfiable as e:
+        return [Diagnostic(
+            "mesh-devices", ERROR, str(e),
+            evidence={"mesh": mesh.key(), "needs": mesh.n_devices})]
+    return []
+
+
+def _rule_shard_fallback(cfg, shape, combo, seg,
+                         axis_sizes) -> List[Diagnostic]:
+    if not axis_sizes:
+        return []
+    from repro.core.providers import get_provider
+    mapping = get_provider(combo.provider).mapping(
+        cfg, axis_sizes, combo.flags, seg)
+    r = resolver(mapping, axis_sizes)
+    dims = _logical_dims(cfg, shape)
+    out: List[Diagnostic] = []
+    for name, cands in sorted(r.mapping.items()):
+        if cands[0] is None or name not in dims:
+            continue
+        # only a *divisibility* fallback is news: a candidate whose mesh
+        # axes simply don't exist here is structural (provider mappings
+        # are mesh-generic), not a silently-degraded sharding
+        reachable = []
+        for cand in cands:
+            if cand is None:
+                continue
+            axes = (cand,) if isinstance(cand, str) else tuple(cand)
+            axes = tuple(a for a in axes if a in axis_sizes)
+            if axes:
+                reachable.append(axes)
+        if not reachable:
+            continue
+        dim = dims[name]
+        if r._resolve_one(name, dim, set()) is None:
+            out.append(Diagnostic(
+                "shard-fallback", WARN,
+                f"logical axis {name!r} (dim {dim}) not divisible by "
+                f"its mapped mesh axes {reachable[0]!r} under mesh "
+                f"{axis_sizes}: silently replicated",
+                segment=seg.name,
+                evidence={"axis": name, "dim": dim,
+                          "mesh": dict(axis_sizes)}))
+    return out
+
+
+def _rule_opt_dtype(shape, knobs) -> List[Diagnostic]:
+    if shape.kind == "train" and knobs is not None \
+            and knobs.opt_state_dtype == "bfloat16":
+        return [Diagnostic(
+            "dtype-flow", WARN,
+            "opt_state_dtype=bfloat16: optimizer-state accumulation in "
+            "bf16 loses small updates (~8 bits of mantissa)",
+            evidence={"opt_state_dtype": knobs.opt_state_dtype})]
+    return []
+
+
+def _rule_dtype_flow(cfg, shape, combo, seg) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    if shape.kind == "decode" and seg.kind == "stack" and seg.has_attn \
+            and not combo.clause.cache_upcast and cfg.dtype == "bfloat16":
+        out.append(Diagnostic(
+            "dtype-flow", WARN,
+            "cache_upcast=False with a bfloat16 KV cache: attention "
+            "logits accumulate in reduced precision",
+            segment=seg.name,
+            evidence={"dtype": cfg.dtype,
+                      "cache_upcast": combo.clause.cache_upcast}))
+    return out
+
+
+def _rule_donation(cfg, shape, combo, knobs, seg) -> List[Diagnostic]:
+    """Abstract-trace the segment program (``jax.eval_shape`` — exactly
+    the tracing ``jit.lower`` performs, but no compile) and flag donated
+    buffers whose shape/dtype matches no output.  A failing trace is
+    itself a sound *error*: the compile traces identically."""
+    if shape.kind != "train" or knobs is None:
+        return []
+    import jax
+    from repro.core.timer import segment_program
+    try:
+        fn, args, _ = segment_program(cfg, shape, seg, combo, None,
+                                      knobs=knobs)
+        out_shapes = jax.eval_shape(fn, *args)
+    except Exception as e:
+        return [Diagnostic(
+            "trace", ERROR,
+            f"abstract trace failed: {type(e).__name__}: {e}",
+            segment=seg.name,
+            evidence={"exception": type(e).__name__})]
+    if not knobs.donate:
+        return []
+    # DryRunExecutor donates argnums (0,) — the segment params — on
+    # train shapes; a donated leaf is reusable iff some output leaf has
+    # its exact shape+dtype (XLA aliasing granularity)
+    avail: Dict[tuple, int] = {}
+    for leaf in jax.tree.leaves(out_shapes):
+        key = (tuple(leaf.shape), str(leaf.dtype))
+        avail[key] = avail.get(key, 0) + 1
+    unmatched = 0
+    for leaf in jax.tree.leaves(args[0]):
+        key = (tuple(leaf.shape), str(leaf.dtype))
+        if avail.get(key, 0) > 0:
+            avail[key] -= 1
+        else:
+            unmatched += 1
+    if unmatched:
+        return [Diagnostic(
+            "donate-unshaped", WARN,
+            f"{unmatched} donated param buffer(s) match no output "
+            f"shape/dtype: donation cannot alias them (XLA copies)",
+            segment=seg.name, evidence={"unmatched": unmatched})]
+    return []
+
+
+# --- entry point ------------------------------------------------------------
+
+def analyze_point(cfg: ArchConfig, shape: ShapeConfig, combo: Combination,
+                  knobs: Optional[GlobalKnobs] = None, mesh=None,
+                  segments: Optional[Sequence[Segment]] = None, *,
+                  check_devices: bool = False,
+                  trace: bool = False) -> List[Diagnostic]:
+    """Lint one sweep point without compiling anything.
+
+    ``mesh`` accepts a :class:`MeshSpec` (a swept topology point), a
+    live ``jax.Mesh`` (a fixed constructor mesh), or ``None``;
+    ``segments`` defaults to every segment of ``cfg`` (pass one to lint
+    a single scheduler row).  ``check_devices`` enables the host-local
+    mesh satisfiability check (only meaningful where the linting host is
+    the scoring host); ``trace`` enables the abstract-trace rules
+    (donation safety + trace failures) — cheap per point but not free,
+    so the scheduler's bulk path leaves it off and the plan lint turns
+    it on.
+
+    Returns structured :class:`Diagnostic` records, errors first.
+    """
+    segs = list(segments) if segments is not None else list(fragment(cfg))
+    axis_sizes = _axis_sizes(mesh)
+    diags: List[Diagnostic] = []
+    diags += _rule_microbatch(shape, knobs)
+    diags += _rule_opt_dtype(shape, knobs)
+    if check_devices:
+        diags += _rule_mesh_devices(mesh)
+    for seg in segs:
+        diags += _rule_tiles(cfg, shape, combo, seg)
+        diags += _rule_shard_fallback(cfg, shape, combo, seg, axis_sizes)
+        diags += _rule_dtype_flow(cfg, shape, combo, seg)
+        if trace:
+            diags += _rule_donation(cfg, shape, combo, knobs, seg)
+    diags.sort(key=lambda d: (d.severity != ERROR,))
+    return diags

@@ -45,6 +45,11 @@ from repro.core.segment import Segment
 #: and ``fallback`` (scored by a local backend after the remote retry
 #: budget ran out).  A v2 peer would silently drop both fields and a
 #: degraded run would report itself as healthy.
+#:
+#: Note: ``static`` outcomes (PlanLint rejections, PR 9) are settled by
+#: the Scheduler *before* a JobSpec exists — they never appear in
+#: JobSpec/JobOutcome payloads and are never cached, so the wire format
+#: is unchanged and needs no bump.
 WIRE_VERSION = 3
 
 

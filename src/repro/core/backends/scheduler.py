@@ -25,7 +25,7 @@ from repro.core.segment import Segment
 from repro.core.validator import validate_combination
 
 #: statuses that Continue mode treats as settled (no re-run on resume)
-SETTLED = ("done", "failed", "invalid", "pruned")
+SETTLED = ("done", "failed", "invalid", "pruned", "static")
 
 
 def shape_key(shape: ShapeConfig) -> str:
@@ -77,7 +77,9 @@ class Scheduler:
                  shape_key: Optional[str] = None,
                  mesh_key: Optional[str] = None,
                  boundary_slack: bool = False,
-                 kernel_tuning=None):
+                 kernel_tuning=None,
+                 static_checks: str = "off",
+                 static_devices: bool = False):
         self.db = db
         self.project = project
         self.cfg = cfg
@@ -94,6 +96,18 @@ class Scheduler:
         # schedule certified kernel flops tighten each job's compute
         # floor; None = no kernel axis, bounds unchanged
         self.kernel_tuning = kernel_tuning
+        # static lint mode: "off" (hand-built Schedulers: no lint at
+        # all), "warn" (lint + histogram, every point still dispatched),
+        # "strict" (error-diagnosed rows settled as "static" before they
+        # become JobSpecs — sound: every dropped point provably fails)
+        if static_checks not in ("strict", "warn", "off"):
+            raise ValueError(f"static_checks={static_checks!r}: expected "
+                             f"'strict' | 'warn' | 'off'")
+        self.static_checks = static_checks
+        # host-local mesh satisfiability (MeshSpec.check_local) is only
+        # a valid rule when the linting host IS the scoring host — the
+        # tuner enables it for every backend except remote
+        self.static_devices = static_devices
         # the cache keys the pipeline reads AND writes under — a caller
         # (the tuner) passes one pair so write and read can't desync
         self.shape_key = shape_key if shape_key is not None \
@@ -151,6 +165,7 @@ class Scheduler:
         # group pending rows by structural program identity (never
         # across mesh points: the group key carries the point's mid)
         valid_memo: Dict[str, Tuple[bool, str]] = {}
+        static_memo: Dict[Tuple, list] = {}
         map_memo: Dict[Tuple[Optional[str], str, str], str] = {}
         # per-segment invariants, computed once (not per mesh/knob point)
         seg_memo = {seg.name: (seg.signature(self.cfg, self.shape),
@@ -181,6 +196,27 @@ class Scheduler:
                             if not ok:
                                 recorder.invalid(seg.name, rid, msg)
                                 continue
+                        if self.static_checks != "off":
+                            # diagnostics depend only on (segment,
+                            # combination, knob point, mesh point) — one
+                            # lint per distinct tuple, accounted per row
+                            skey = (seg.name, c.cid, kn.kid, mmid)
+                            diags = static_memo.get(skey)
+                            if diags is None:
+                                from repro.analysis.rules import \
+                                    analyze_point
+                                diags = analyze_point(
+                                    self.cfg, self.shape, c, knobs=kn,
+                                    mesh=mp if swept_mesh else self.mesh,
+                                    segments=(seg,),
+                                    check_devices=self.static_devices)
+                                static_memo[skey] = diags
+                            if diags:
+                                recorder.static_note(diags)
+                                errs = [d for d in diags if d.is_error]
+                                if errs and self.static_checks == "strict":
+                                    recorder.static(seg.name, rid, errs)
+                                    continue
                         mk = map_memo.get((mmid, seg.name, c.cid))
                         if mk is None:
                             mk = mapping_key(self.cfg, mesh_for_map, c, seg)

@@ -26,7 +26,8 @@ CREATE TABLE IF NOT EXISTS combinations (
     segment TEXT,
     cid TEXT,
     spec TEXT,
-    status TEXT DEFAULT 'pending',   -- pending | done | failed | invalid | pruned
+    status TEXT DEFAULT 'pending',   -- pending | done | failed | invalid
+                                     --   | pruned | static
     cost TEXT,
     error TEXT,
     updated REAL,

@@ -55,6 +55,15 @@ class Plan:
         with open(path) as f:
             return cls.from_json(json.load(f))
 
+    def lint(self, cfg: ArchConfig, shape, *, trace: bool = True):
+        """Certify this plan against ``(cfg, shape)`` without compiling.
+
+        Thin wrapper over :func:`repro.analysis.analyze_plan` — returns
+        the list of :class:`repro.analysis.Diagnostic`; empty means the
+        plan passes every static rule."""
+        from repro.analysis import analyze_plan
+        return analyze_plan(cfg, shape, self, trace=trace)
+
     def describe(self) -> str:
         lines = [f"knobs: {self.knobs.key()}"]
         if self.mesh is not None:

@@ -65,6 +65,11 @@ class SweepReport:
     n_cached: int = 0       # rows served from the persistent score cache
     n_shared: int = 0       # rows that shared an in-run compiled score
     n_transient: int = 0    # rows failed by deadline/crash (retryable)
+    n_static: int = 0       # rows rejected by the static analyzer before
+                            # dispatch (static_checks="strict")
+    n_inapplicable: int = 0  # (segment, combination) pairs dropped because
+                             # the provider is inapplicable to the segment
+                             # (counted once, before the knob/mesh axes)
     n_knob_points: int = 1  # GlobalKnobs points swept (the RTL axis)
     n_mesh_points: int = 1  # mesh/topology points swept (the mesh axis)
     paper_count: int = 0    # the paper's formula, an upper bound
@@ -77,6 +82,10 @@ class SweepReport:
     #: failure-kind histogram over FAILED rows ("deadline", "crash",
     #: "mesh", "unreachable", "server", "deterministic", "transient")
     failure_kinds: Dict[str, int] = field(default_factory=dict)
+    #: per-rule histogram over statically diagnosed rows (strict AND
+    #: warn modes; one count per row per distinct rule) — see
+    #: repro.analysis for the rule ids
+    static_rules: Dict[str, int] = field(default_factory=dict)
     #: the winning (mesh, knob) point's per-segment valid rows
     per_segment: Dict[str, List[Tuple[Combination, CostTerms]]] = \
         field(default_factory=dict)
@@ -104,6 +113,14 @@ class SweepReport:
              f"realized={self.n_combinations} "
              f"paper_formula_upper_bound={self.paper_count} "
              f"elapsed={self.elapsed_s:.1f}s")
+        if self.n_static or self.static_rules:
+            s += f" static={self.n_static}"
+            if self.static_rules:
+                rules = ",".join(f"{k}:{v}" for k, v in
+                                 sorted(self.static_rules.items()))
+                s += f"[{rules}]"
+        if self.n_inapplicable:
+            s += f" inapplicable={self.n_inapplicable}"
         if self.n_transient_retried:
             s += f" transient_retried={self.n_transient_retried}"
         if self.n_fallback_local:
@@ -186,6 +203,7 @@ class ComParTuner:
               retry=None,
               transient_retries: Optional[int] = None,
               kernel_space=None, kernel_top_k: int = 2,
+              static_checks: str = "warn",
               prune: bool = False, prune_margin: float = 0.1,
               use_cache: bool = True, share_scores: bool = True,
               record_batch: int = 64) -> Tuple[Plan, SweepReport]:
@@ -256,6 +274,18 @@ class ComParTuner:
                           (``>= len(grid)`` keeps everything: the sweep
                           is then byte-identical to an exhaustive clause
                           sweep over the merged space)
+        ``static_checks`` the static validity analyzer
+                          (``repro.analysis``): ``"warn"`` (default —
+                          lint every point, report the per-rule
+                          histogram in ``SweepReport.static_rules``,
+                          dispatch everything), ``"strict"`` (also
+                          settle ``error``-diagnosed rows as
+                          ``"static"`` before they become JobSpecs —
+                          sound: every dropped point provably fails
+                          when compiled, so the fused plan is
+                          byte-identical to an unlinted sweep), or
+                          ``"off"`` (no lint at all).  Static rows are
+                          never written to ``score_cache``.
         ``prune``         exact lower-bound pruning on/off
         ``prune_margin``  relative headroom the bound must clear
         ``use_cache``     persistent structural score cache on/off
@@ -359,13 +389,21 @@ class ComParTuner:
 
         # Combinator: register every (segment, combination, knob point,
         # mesh point), one transaction.  Unswept mesh = None (bare row
-        # ids: pre-mesh projects resume unchanged).
+        # ids: pre-mesh projects resume unchanged).  Inapplicable
+        # (provider, segment) pairs are counted, not silently dropped —
+        # sweep accounting must be exact against paper_combination_count.
         per_seg_combos: Dict[str, List[Combination]] = {}
         for seg in segs:
-            per_seg_combos[seg.name] = [
-                c for c in combos
-                if get_provider(c.provider).applicable(self.cfg, seg)
-                and (tuning is None or tuning.keeps(seg.name, c.clause))]
+            kept: List[Combination] = []
+            for c in combos:
+                if not get_provider(c.provider).applicable(self.cfg, seg):
+                    rep.n_inapplicable += 1
+                    continue
+                if tuning is not None and not tuning.keeps(seg.name,
+                                                           c.clause):
+                    continue
+                kept.append(c)
+            per_seg_combos[seg.name] = kept
         reg: List[Tuple] = []
         for mp in (mpoints if mesh_swept else [None]):
             for kn in points:
@@ -377,6 +415,7 @@ class ComParTuner:
 
         self._execute(segs, per_seg_combos, points, rep,
                       mesh_points=mpoints, kernel_tuning=tuning,
+                      static_checks=static_checks,
                       backend=backend, workers=workers,
                       remote_url=remote_url, remote_token=remote_token,
                       fallback=fallback, retry=retry,
@@ -408,6 +447,7 @@ class ComParTuner:
         rep.n_failed = counts.get("failed", 0)
         rep.n_invalid = counts.get("invalid", 0)
         rep.n_pruned = counts.get("pruned", 0)
+        rep.n_static = counts.get("static", 0)
         rep.bound_tightness, violations = self._bound_tightness()
         if violations:
             # should be impossible (the bound is certified); seeing this
@@ -515,6 +555,7 @@ class ComParTuner:
                  rep: SweepReport, *,
                  mesh_points: Optional[Sequence[MeshSpec]],
                  kernel_tuning=None,
+                 static_checks: str = "off",
                  backend: str, workers: int,
                  remote_url: Optional[str],
                  remote_token: Optional[str], fallback: Optional[str],
@@ -536,7 +577,10 @@ class ComParTuner:
             self.executor, validate=self.validate,
             share_scores=share_scores, use_cache=use_cache,
             shape_key=sk, mesh_key=mk, boundary_slack=boundary_slack,
-            kernel_tuning=kernel_tuning)
+            kernel_tuning=kernel_tuning, static_checks=static_checks,
+            # the mesh-devices rule asks THIS host: valid for every
+            # backend that scores locally, never for a remote server
+            static_devices=(backend != "remote"))
         recorder = Recorder(
             self.db, self.project, rep, shape_key=sk, mesh_key=mk,
             use_cache=use_cache, batch=record_batch)

@@ -278,6 +278,17 @@ def _measure_one(op: str, fields: Dict[str, object], cfg, shape,
     from repro.core.executor import (CombinationFailed, analyze_compiled,
                                      deadline, lower_and_compile)
     try:
+        # static pre-check: the op programs call the kernels directly, so
+        # a tile-divisibility ERROR from the schedule lint is exactly the
+        # assert the compile would die on — reject it without compiling.
+        # Deterministic (rule-set) verdict, so caching it as "failed" is
+        # as sound as caching the compile failure it predicts.
+        from repro.analysis.rules import lint_schedule
+        errs = [d for d in lint_schedule(op, fields, cfg, shape)
+                if d.is_error]
+        if errs:
+            return {"status": "failed", "error": "static: " +
+                    "; ".join(f"{d.rule}: {d.message}" for d in errs)}
         with deadline(getattr(executor, "timeout_s", None)):
             fn, args = _op_program(op, fields, cfg, shape)
             hw = getattr(executor, "hw", None)

@@ -1,0 +1,451 @@
+"""PlanLint: the static validity analyzer and its soundness contract.
+
+The contract under test: every point the analyzer rejects at error
+severity really does fail to compile (force-compiled here, row by row),
+and on an all-valid space a strict sweep fuses a plan byte-identical to
+an unlinted one — the lint is a pure accelerator, never an approximation.
+Satellites ride along: the black-box validator catches a
+numerics-corrupting plan, and the HLO analyzer's bytes/flops accounting
+is pinned against a hand-written fixture.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.analysis import (Diagnostic, analyze_plan, analyze_point, errors,
+                            format_diagnostics, lint_schedule)
+from repro.analysis.diagnostics import ERROR, WARN
+from repro.configs import get_arch, get_shape
+from repro.core import ComParTuner, SweepDB
+from repro.core.combinator import Combination, GlobalKnobs
+from repro.core.executor import CombinationFailed, DryRunExecutor
+from repro.core.meshspec import MeshSpec
+from repro.core.plan import Plan, uniform_plan
+from repro.core.segment import fragment
+from repro.models.context import SegmentClause
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_arch("stablelm-3b").smoke()
+
+
+@pytest.fixture(scope="module")
+def shape():
+    return get_shape("train_4k").smoke()
+
+
+@pytest.fixture(scope="module")
+def decode_shape():
+    return get_shape("decode_32k").smoke()
+
+
+def _combo(provider="fsdp", flags=(), **clause):
+    return Combination(provider, frozenset(flags), SegmentClause(**clause))
+
+
+# --- rule units -------------------------------------------------------------
+
+def test_valid_point_is_clean(cfg, shape):
+    assert analyze_point(cfg, shape, _combo(), knobs=GlobalKnobs()) == []
+
+
+def test_microbatch_rule(cfg, shape):
+    diags = analyze_point(cfg, shape, _combo(),
+                          knobs=GlobalKnobs(microbatches=3))
+    assert [d.rule for d in diags] == ["microbatch"]
+    assert diags[0].is_error
+    assert diags[0].evidence["global_batch"] == shape.global_batch
+    # divisible split: clean
+    assert analyze_point(cfg, shape, _combo(),
+                         knobs=GlobalKnobs(microbatches=2)) == []
+
+
+def test_attn_tile_rule(cfg, shape):
+    diags = analyze_point(cfg, shape, _combo(kernel="pallas", block_q=24,
+                                             block_k=32))
+    tile = [d for d in diags if d.rule == "attn-tile"]
+    assert tile and all(d.is_error for d in tile)
+    # the tile rule anchors to the stack segment, not embed/head
+    assert {d.segment for d in tile} == {"g0"}
+    assert not errors(analyze_point(
+        cfg, shape, _combo(kernel="pallas", block_q=16, block_k=32)))
+
+
+def test_attn_chunk_fallback_warns_on_xla(cfg, shape):
+    diags = analyze_point(cfg, shape, _combo(kernel="xla", block_q=24))
+    fall = [d for d in diags if d.rule == "attn-chunk-fallback"]
+    assert fall and all(d.severity == WARN for d in fall)
+
+
+def test_decode_tile_rule_and_shardmap_demotion(cfg, decode_shape):
+    bad = _combo(kernel="pallas", block_k=24)
+    diags = analyze_point(cfg, decode_shape, bad)
+    tile = [d for d in diags if d.rule == "decode-tile"]
+    assert tile and tile[0].is_error
+    # decode_shardmap may route around the kernel (the gate is
+    # data-dependent), so strict mode must not reject the point
+    demoted = analyze_point(
+        cfg, decode_shape, _combo(kernel="pallas", block_k=24,
+                                  decode_shardmap=True))
+    tile = [d for d in demoted if d.rule == "decode-tile"]
+    assert tile and tile[0].severity == WARN
+
+
+def test_chunk_clamp_schedule_lint(cfg, shape):
+    diags = lint_schedule("mlstm_chunkwise",
+                          {"kernel": "pallas", "mlstm_chunk": 24},
+                          cfg, shape)
+    assert [d.rule for d in diags] == ["chunk-clamp"]
+    assert diags[0].severity == WARN
+    assert lint_schedule("mlstm_chunkwise",
+                         {"kernel": "pallas", "mlstm_chunk": 16},
+                         cfg, shape) == []
+
+
+def test_shard_fallback_warns_only_on_divisibility(cfg, shape):
+    # model=3 divides neither heads=2 nor ffn: Rules silently replicates
+    diags = analyze_point(cfg, shape, _combo("tensor_par"),
+                          mesh=MeshSpec((("model", 3),)))
+    fall = [d for d in diags if d.rule == "shard-fallback"]
+    assert fall and all(d.severity == WARN for d in fall)
+    # an axis merely absent from the mesh is structural, not a fallback
+    assert not [d for d in analyze_point(cfg, shape, _combo("tensor_par"),
+                                         mesh=MeshSpec((("data", 2),)))
+                if d.rule == "shard-fallback"]
+
+
+def test_mesh_devices_rule_is_opt_in(cfg, shape):
+    # data=2 divides every mapped dim (no shard-fallback) but exceeds
+    # this 1-device CPU host — only check_devices=True may reject that
+    big = MeshSpec((("data", 2),))
+    assert analyze_point(cfg, shape, _combo(), mesh=big) == []
+    diags = analyze_point(cfg, shape, _combo(), mesh=big, check_devices=True)
+    assert [d.rule for d in errors(diags)] == ["mesh-devices"]
+
+
+def test_opt_state_dtype_warns_once_per_point(cfg, shape):
+    diags = analyze_point(cfg, shape, _combo(),
+                          knobs=GlobalKnobs(opt_state_dtype="bfloat16"))
+    assert [d.rule for d in diags] == ["dtype-flow"]
+
+
+def test_cache_upcast_dtype_flow(cfg, decode_shape):
+    bf16 = dataclasses.replace(cfg, dtype="bfloat16")
+    diags = analyze_point(bf16, decode_shape, _combo(cache_upcast=False))
+    assert any(d.rule == "dtype-flow" for d in diags)
+    assert not any(d.rule == "dtype-flow"
+                   for d in analyze_point(bf16, decode_shape, _combo()))
+
+
+def test_trace_rule_reproduces_microbatch_failure(cfg, shape):
+    diags = analyze_point(cfg, shape, _combo(),
+                          knobs=GlobalKnobs(microbatches=3), trace=True)
+    assert any(d.rule == "trace" for d in diags)
+    clean = analyze_point(cfg, shape, _combo(), knobs=GlobalKnobs(),
+                          trace=True)
+    assert clean == []          # valid point: trace + donation both clean
+
+
+def test_diagnostic_roundtrip_and_format():
+    d = Diagnostic("attn-tile", ERROR, "boom", segment="g0",
+                   evidence={"seq_len": 32})
+    assert Diagnostic.from_json(d.to_json()) == d
+    assert "ERROR" in str(d) and "g0" in str(d)
+    w = Diagnostic("chunk-clamp", WARN, "meh")
+    txt = format_diagnostics([w, d])
+    assert txt.index("attn-tile") < txt.index("chunk-clamp")  # errors first
+    with pytest.raises(ValueError):
+        Diagnostic("x", "fatal", "nope")
+
+
+# --- sweep wiring + the soundness contract ---------------------------------
+
+INVALID_SPACE = {"remat": ("none",), "kernel": ("xla", "pallas"),
+                 "block_q": (16, 24), "block_k": (32,),
+                 "scan_unroll": (1,), "mlstm_chunk": (16,)}
+INVALID_GLOBALS = {"microbatches": (1, 3)}
+
+
+def _sweep(cfg, shape, checks, project="lint", db=None, **kw):
+    tuner = ComParTuner(cfg, shape, mesh=None, db=db or SweepDB(":memory:"),
+                        project=project, mode="new", executor="dryrun")
+    plan, rep = tuner.sweep(providers=["fsdp"], clause_space=INVALID_SPACE,
+                            global_space=INVALID_GLOBALS, max_flags=0,
+                            static_checks=checks, **kw)
+    return tuner, plan, rep
+
+
+@pytest.fixture(scope="module")
+def strict_sweep(cfg, shape):
+    db = SweepDB(":memory:")
+    tuner, plan, rep = _sweep(cfg, shape, "strict", db=db)
+    return db, tuner, plan, rep
+
+
+def test_strict_rejects_and_accounts(strict_sweep):
+    db, tuner, plan, rep = strict_sweep
+    assert rep.n_static > 0
+    assert rep.n_failed == 0          # every invalid point caught statically
+    assert rep.static_rules.get("microbatch", 0) > 0
+    assert rep.static_rules.get("attn-tile", 0) > 0
+    s = rep.summary()
+    assert f"static={rep.n_static}" in s and "microbatch:" in s
+
+
+def test_static_rows_soundness_force_compile(strict_sweep, cfg, shape):
+    """THE contract: force-compile every statically rejected row and
+    assert each one actually fails — strict mode never drops a point the
+    compiler would have accepted."""
+    db, tuner, plan, rep = strict_sweep
+    rows = [r for r in db.results(tuner.project) if r["status"] == "static"]
+    assert len(rows) == rep.n_static > 0
+    segs = {s.name: s for s in fragment(cfg)}
+    ex = DryRunExecutor(None)
+    seen = set()
+    for r in rows:
+        key = (r["segment"], r["combo"].label(),
+               r["knobs"].key() if r["knobs"] else "")
+        if key in seen:            # identical program: one compile suffices
+            continue
+        seen.add(key)
+        with pytest.raises(CombinationFailed):
+            ex.score_segment(cfg, shape, segs[r["segment"]], r["combo"],
+                             knobs=r["knobs"])
+
+
+def test_static_rows_never_enter_score_cache(strict_sweep):
+    db, tuner, plan, rep = strict_sweep
+    statuses = {s for (s,) in
+                db.conn.execute("SELECT status FROM score_cache")}
+    assert statuses <= {"done"}   # rejected points were never even scored
+
+
+def test_warn_mode_accounts_but_drops_nothing(cfg, shape):
+    _, plan_w, rep_w = _sweep(cfg, shape, "warn")
+    assert rep_w.n_static == 0            # nothing settled as static
+    assert rep_w.n_failed > 0             # invalid points still dispatched
+    assert rep_w.static_rules.get("microbatch", 0) > 0   # ...but accounted
+
+
+def test_strict_off_warn_fuse_identical_plans(cfg, shape, strict_sweep):
+    _, _, plan_s, rep_s = strict_sweep
+    _, plan_o, rep_o = _sweep(cfg, shape, "off")
+    _, plan_w, _ = _sweep(cfg, shape, "warn")
+    bs = json.dumps(plan_s.to_json(), sort_keys=True)
+    assert bs == json.dumps(plan_o.to_json(), sort_keys=True)
+    assert bs == json.dumps(plan_w.to_json(), sort_keys=True)
+    # strict really did skip the dispatches the off run paid for
+    assert rep_o.n_failed == rep_s.n_static
+
+
+def test_bad_static_checks_value_raises(cfg, shape):
+    with pytest.raises(ValueError):
+        _sweep(cfg, shape, "pedantic")
+
+
+def test_inapplicable_provider_rows_are_counted(cfg, shape):
+    # expert_par declares itself inapplicable to dense (non-MoE) stacks:
+    # those rows are dropped pre-registration and now accounted
+    tuner = ComParTuner(cfg, shape, mesh=None, db=SweepDB(":memory:"),
+                        project="inap", mode="new", executor="dryrun")
+    plan, rep = tuner.sweep(
+        providers=["fsdp", "expert_par"],
+        clause_space={"kernel": ("xla",), "block_q": (16,)}, max_flags=0)
+    assert rep.n_inapplicable > 0
+    assert f"inapplicable={rep.n_inapplicable}" in rep.summary()
+
+
+# --- plan lint --------------------------------------------------------------
+
+def test_plan_lint_clean_and_boundary_reshard(cfg, shape):
+    assert uniform_plan(cfg, "fsdp").lint(cfg, shape) == []
+    # a mixed plan whose middle segment shards the residual seq dim
+    # forces an unpriced reshard at both boundaries
+    mesh = MeshSpec((("data", 2), ("model", 2)))
+    plan = Plan({"embed": _combo(), "g0": _combo("tensor_par",
+                                                flags=("seq_parallel",)),
+                 "head": _combo()}, GlobalKnobs(), {}, mesh)
+    diags = analyze_plan(cfg, shape, plan, trace=False)
+    reshard = [d for d in diags if d.rule == "boundary-reshard"]
+    assert len(reshard) == 2 and all(d.severity == WARN for d in reshard)
+    # Viterbi-fused plans priced the boundary: exempt
+    plan.meta["fusion"] = "viterbi-boundary"
+    assert not [d for d in analyze_plan(cfg, shape, plan, trace=False)
+                if d.rule == "boundary-reshard"]
+
+
+def test_plan_lint_missing_segment_and_errors(cfg, shape):
+    plan = Plan({"embed": _combo()}, GlobalKnobs(microbatches=3))
+    diags = analyze_plan(cfg, shape, plan, trace=False)
+    assert any(d.rule == "missing-segment" for d in diags)
+    assert any(d.rule == "microbatch" and d.is_error for d in diags)
+    assert diags[0].is_error          # errors sort first
+
+
+# --- CLI --------------------------------------------------------------------
+
+def test_lint_cli_plan_and_sweep(tmp_path, cfg, capsys):
+    from repro.analysis.lint import main
+    ppath = tmp_path / "plan.json"
+    uniform_plan(cfg, "fsdp").save(str(ppath))
+    assert main([str(ppath)]) == 0
+    assert "plan" in capsys.readouterr().out
+
+    spec = {"providers": {"fsdp": []},
+            "clauses": {"kernel": ["pallas"], "block_q": [24],
+                        "block_k": [32]},
+            "globals": {"microbatches": [1]}}
+    spath = tmp_path / "sweep.json"
+    spath.write_text(json.dumps(spec))
+    assert main([str(spath)]) == 2          # attn-tile errors gate the CI
+    out = capsys.readouterr().out
+    assert "attn-tile" in out and "error" in out
+    assert main([str(tmp_path / "missing.json")]) == 1
+
+
+def test_lint_cli_strict_gates_warnings(tmp_path, capsys):
+    from repro.analysis.lint import main
+    spec = {"providers": {"fsdp": []},
+            "clauses": {"kernel": ["xla"], "block_q": [24]},
+            "globals": {"microbatches": [1]}}
+    spath = tmp_path / "sweep.json"
+    spath.write_text(json.dumps(spec))
+    assert main([str(spath)]) == 0          # warnings only
+    assert main([str(spath), "--strict"]) == 2
+    capsys.readouterr()
+
+
+# --- autotuner pre-check ----------------------------------------------------
+
+def test_autotune_rejects_invalid_schedule_statically(cfg, shape):
+    from repro.kernels.autotune import _measure_one
+    ex = DryRunExecutor(None)
+    bad = _measure_one("flash_attention",
+                       {"kernel": "pallas", "block_q": 24, "block_k": 32},
+                       cfg, shape, ex)
+    assert bad["status"] == "failed" and bad["error"].startswith("static:")
+    assert "attn-tile" in bad["error"]
+    good = _measure_one("flash_attention",
+                        {"kernel": "xla", "block_q": 16, "block_k": 32},
+                        cfg, shape, ex)
+    assert good["status"] == "done"
+
+
+# --- satellite: black-box validator -----------------------------------------
+
+def test_validator_passes_reference_and_pallas(cfg):
+    ok, msg = __import__("repro.core.validator",
+                         fromlist=["validate_plan"]).validate_plan(
+        cfg, uniform_plan(cfg, "fsdp"))
+    assert ok, msg
+
+
+def test_validator_rejects_numerics_corrupting_plan(cfg, monkeypatch):
+    """A plan routed through a (deliberately broken) kernel must be
+    rejected by the black-box check — the paper's user-testing-script
+    rejection, exercised end to end."""
+    import repro.kernels as kops
+    from repro.core.validator import validate_plan
+    plan = uniform_plan(cfg, "fsdp",
+                        clause=SegmentClause(kernel="pallas", block_q=16,
+                                             block_k=16))
+    ok, msg = validate_plan(cfg, plan)
+    assert ok, msg                          # sane kernel: within tolerance
+    real = kops.flash_attention
+    monkeypatch.setattr(kops, "flash_attention",
+                        lambda *a, **k: real(*a, **k) * 1.5)
+    ok, msg = validate_plan(cfg, plan)
+    assert not ok and "mismatch" in msg
+
+
+# --- satellite: HLO bytes-accounting regression fixture ---------------------
+
+# A hand-written optimized-HLO module pinning the analyzer's accounting:
+# a while loop with known_trip_count=3 (dot + all-reduce per iteration),
+# an entry dot in the OLDER inline-typed-operand form (operand shapes on
+# the line, names absent from the symbol table), a dus-rooted fusion
+# (traffic = 2 x update slice, captured full buffers excluded), an
+# iota-form and a list-form replica_groups collective, and converts
+# (CPU float-normalization artifacts — zero bytes).
+PINNED_HLO = """\
+HloModule pinned_accounting
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%update.0 (param_0: f32[8,16], param_1: f32[1,16], param_2: s32[]) -> f32[8,16] {
+  %param_0 = f32[8,16]{1,0} parameter(0)
+  %param_1 = f32[1,16]{1,0} parameter(1)
+  %param_2 = s32[] parameter(2)
+  %zero = s32[] constant(0)
+  ROOT %dus.1 = f32[8,16]{1,0} dynamic-update-slice(%param_0, %param_1, %param_2, %zero)
+}
+
+%wbody (warg: (f32[4,8], f32[8,8], s32[])) -> (f32[4,8], f32[8,8], s32[]) {
+  %warg = (f32[4,8]{1,0}, f32[8,8]{1,0}, s32[]) parameter(0)
+  %x = f32[4,8]{1,0} get-tuple-element(%warg), index=0
+  %w = f32[8,8]{1,0} get-tuple-element(%warg), index=1
+  %i = s32[] get-tuple-element(%warg), index=2
+  %mm = f32[4,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[4,8]{1,0} all-reduce(%mm), replica_groups=[1,4], to_apply=%add
+  %one = s32[] constant(1)
+  %inext = s32[] add(%i, %one)
+  ROOT %wt = (f32[4,8]{1,0}, f32[8,8]{1,0}, s32[]) tuple(%ar, %w, %inext)
+}
+
+%wcond (carg: (f32[4,8], f32[8,8], s32[])) -> pred[] {
+  %carg = (f32[4,8]{1,0}, f32[8,8]{1,0}, s32[]) parameter(0)
+  %iter = s32[] get-tuple-element(%carg), index=2
+  %limit = s32[] constant(3)
+  ROOT %lt = pred[] compare(%iter, %limit), direction=LT
+}
+
+ENTRY %main (p0: f32[4,8], p1: f32[8,8], p2: f32[8,16], p3: f32[1,16], p4: s32[]) -> f32[4,16] {
+  %p0 = f32[4,8]{1,0} parameter(0)
+  %p1 = f32[8,8]{1,0} parameter(1)
+  %p2 = f32[8,16]{1,0} parameter(2)
+  %p3 = f32[1,16]{1,0} parameter(3)
+  %p4 = s32[] parameter(4)
+  %c0 = s32[] constant(0)
+  %init = (f32[4,8]{1,0}, f32[8,8]{1,0}, s32[]) tuple(%p0, %p1, %c0)
+  %loop = (f32[4,8]{1,0}, f32[8,8]{1,0}, s32[]) while(%init), condition=%wcond, body=%wbody, backend_config={"known_trip_count":{"n":"3"}}
+  %xout = f32[4,8]{1,0} get-tuple-element(%loop), index=0
+  %cast = bf16[4,8]{1,0} convert(%xout)
+  %recast = f32[4,8]{1,0} convert(%cast)
+  %proj = f32[4,16]{1,0} dot(f32[4,8]{1,0} %lhs.inline, f32[8,16]{1,0} %p2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %cache = f32[8,16]{1,0} fusion(%p2, %p3, %p4), kind=kLoop, calls=%update.0
+  %ag = f32[8,16]{1,0} all-gather(%p3), replica_groups={{0,1},{2,3}}, dimensions={0}
+  ROOT %out = f32[4,16]{1,0} add(%proj, %proj)
+}
+"""
+
+
+def test_hlo_bytes_accounting_pinned_fixture():
+    from repro.runtime.hlo import analyze_hlo, collective_bytes, count_ops
+    res = analyze_hlo(PINNED_HLO)
+    # flops: entry inline-typed dot 2*64*8=1024 (the K comes off the
+    # inline operand type, not the symbol table) + 3 x body dot 512
+    assert res["flops"] == 1024 + 3 * 512
+    # bytes, per the documented accounting:
+    #   entry: dot 256+512 (inline lhs unresolved -> 0) + dus-fusion
+    #   2*72 + all-gather 2*512 + root add 2*256; converts/params/
+    #   tuple/while/gte: 0
+    #   body x3: dot 128+128+256, all-reduce 2*128, add 2*4
+    #   cond x3: compare 2*1
+    assert res["bytes"] == (768 + 144 + 1024 + 512) + 3 * 776 + 3 * 2
+    assert res["bytes_dot"] == 768 + 3 * 512
+    assert res["bytes_dus"] == 144           # 2 x update slice, not 2x8x16
+    # collectives: all-reduce ring 2r(n-1)/n with n=4 (iota groups),
+    # all-gather r(n-1)/n with n=2 (list groups)
+    assert res["coll_all-reduce"] == 3 * (2 * 128 * 3 / 4)
+    assert res["coll_all-gather"] == 512 * 1 / 2
+    assert res["collective"] == 576 + 256
+    assert res["coll_count"] == 4
+    legacy = collective_bytes(PINNED_HLO)
+    assert legacy["total"] == res["collective"]
+    assert count_ops(PINNED_HLO, "dot") == 2
