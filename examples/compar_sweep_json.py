@@ -55,7 +55,9 @@ def main(backend: str = "thread", remote_url: str = None,
         json.dump(spec, f, indent=2)
     print(f"sweep spec written to {spec_path}")
 
-    providers, clause_space, global_space, meshes = load_sweep_json(spec_path)
+    # the typed sweep input: one SweepSpec value instead of the legacy
+    # positional 4-tuple (which still unpacks, with a DeprecationWarning)
+    sweep_spec = load_sweep_json(spec_path)
     cfg = get_arch("stablelm-3b").smoke()
     shape = get_shape("train_4k").smoke()
 
@@ -73,16 +75,14 @@ def main(backend: str = "thread", remote_url: str = None,
     # --mesh-space — its "meshes" list as the topology axis
     tuner = ComParTuner(cfg, shape, mesh=None, db=db, project="json-demo",
                         mode="new", executor="dryrun")
-    plan, rep = tuner.sweep(providers=providers, clause_space=clause_space,
-                            global_space=global_space, mesh_space=meshes,
-                            max_flags=1,
+    plan, rep = tuner.sweep(spec=sweep_spec, max_flags=1,
                             backend=backend, workers=workers, prune=True,
                             remote_url=remote_url,
                             remote_token=remote_token)
     print("first run:", rep.summary())
     assert rep.n_knob_points == 2
     print("per-knob fused totals:", rep.per_knob_total_s)
-    if meshes is not None:
+    if sweep_spec.meshes is not None:
         assert rep.n_mesh_points == len(MESH_SPACE)
         assert plan.mesh is not None       # the topology was chosen
         print("per-mesh fused totals:", rep.per_mesh_total_s)
@@ -92,10 +92,7 @@ def main(backend: str = "thread", remote_url: str = None,
     tuner2 = ComParTuner(cfg, shape, mesh=None, db=db2,
                          project="json-demo", mode="continue",
                          executor="dryrun")
-    plan2, rep2 = tuner2.sweep(providers=providers,
-                               clause_space=clause_space,
-                               global_space=global_space,
-                               mesh_space=meshes,
+    plan2, rep2 = tuner2.sweep(spec=sweep_spec,
                                max_flags=1, backend=backend,
                                remote_url=remote_url,
                                remote_token=remote_token)

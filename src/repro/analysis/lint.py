@@ -38,11 +38,10 @@ def _lint_sweep(cfg, shape, path: str, trace: bool) -> List[Diagnostic]:
     from repro.analysis.rules import analyze_point
     from repro.core.combinator import (enumerate_combinations, global_grid,
                                        load_sweep_json)
-    providers, clause_space, global_space, mesh_space = \
-        load_sweep_json(path)
-    combos = enumerate_combinations(providers, clause_space)
-    points = global_grid(global_space)
-    mpoints = mesh_space if mesh_space is not None else [None]
+    spec = load_sweep_json(path)
+    combos = enumerate_combinations(list(spec.providers), spec.clauses)
+    points = global_grid(spec.globals)
+    mpoints = list(spec.meshes) if spec.meshes is not None else [None]
     out: List[Diagnostic] = []
     n_points = 0
     for mp in mpoints:

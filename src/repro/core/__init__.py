@@ -5,8 +5,9 @@ from repro.core.backends import (  # noqa: F401
     make_backend,
 )
 from repro.core.combinator import (  # noqa: F401
-    Combination, GlobalKnobs, enumerate_combinations, global_grid,
-    paper_combination_count, row_cid, swept_knob_fields,
+    Combination, GlobalKnobs, SweepSpec, enumerate_combinations,
+    global_grid, load_sweep_json, paper_combination_count, row_cid,
+    swept_knob_fields,
 )
 from repro.core.cost_model import CostTerms, Hardware, V5E  # noqa: F401
 from repro.core.db import SweepDB  # noqa: F401
@@ -16,4 +17,6 @@ from repro.core.meshspec import (  # noqa: F401
 )
 from repro.core.plan import Plan, build_contexts, uniform_plan  # noqa: F401
 from repro.core.segment import Segment, fragment  # noqa: F401
-from repro.core.tuner import ComParTuner, SweepReport  # noqa: F401
+from repro.core.tuner import (  # noqa: F401
+    BackendOptions, ComParTuner, SearchOptions, SweepReport,
+)

@@ -253,14 +253,88 @@ def global_grid(space: Optional[Dict[str, Tuple]] = None) -> List[GlobalKnobs]:
             for combo in itertools.product(*(space[k] for k in keys))]
 
 
-def load_sweep_json(path: str):
+@dataclass(frozen=True)
+class SweepSpec:
+    """The typed sweep input: ComPar's three JSON files as one value.
+
+    ``ComParTuner.sweep(spec=...)`` takes it directly; the fields mirror
+    the JSON keys (:meth:`from_json` / :meth:`to_json` round-trip the
+    wire form, :func:`load_sweep_json` reads a file into one):
+
+    * ``providers`` — provider names to race (the "compilers")
+    * ``clauses`` — the directive-clause grid (``clause_space``)
+    * ``globals`` — the GlobalKnobs grid (``global_space``)
+    * ``meshes`` — the topology axis (``mesh_space``); ``None`` = the
+      mesh is not swept
+    * ``kernel_space`` — the inner kernel-schedule grid (JSON key
+      ``"kernels"``); ``None`` = no inner sweep
+
+    :meth:`from_json` normalizes like the legacy loader did: unlisted
+    clause/global fields are pinned to their default's first value, so a
+    spec names ONLY the axes it sweeps.  A spec built by ``from_json``
+    round-trips ``to_json`` exactly; a hand-built one may gain the
+    pinned defaults on the way through.
+    """
+
+    providers: Tuple[str, ...] = ()
+    clauses: Optional[Dict[str, Tuple]] = None
+    globals: Optional[Dict[str, Tuple]] = None
+    meshes: Optional[Tuple] = None          # tuple of MeshSpec
+    kernel_space: Optional[Dict[str, Tuple]] = None
+
+    @classmethod
+    def from_json(cls, spec: Dict) -> "SweepSpec":
+        from repro.core.meshspec import as_mesh_point
+        providers = tuple(spec.get("providers", {}))
+        clauses = {k: tuple(v) for k, v in spec.get("clauses", {}).items()}
+        for k, v in DEFAULT_CLAUSE_SPACE.items():
+            clauses.setdefault(k, (v[0],))
+        gl = {k: tuple(v) for k, v in spec.get("globals", {}).items()}
+        for k, v in DEFAULT_GLOBAL_SPACE.items():
+            gl.setdefault(k, (v[0],))
+        meshes = tuple(as_mesh_point(m) for m in spec["meshes"]) \
+            if "meshes" in spec else None
+        kernels = {k: tuple(v) for k, v in spec["kernels"].items()} \
+            if "kernels" in spec else None
+        return cls(providers, clauses, gl, meshes, kernels)
+
+    def to_json(self) -> Dict:
+        out: Dict = {"providers": {p: [] for p in self.providers}}
+        if self.clauses is not None:
+            out["clauses"] = {k: list(v) for k, v in self.clauses.items()}
+        if self.globals is not None:
+            out["globals"] = {k: list(v) for k, v in self.globals.items()}
+        if self.meshes is not None:
+            out["meshes"] = [m.to_json() for m in self.meshes]
+        if self.kernel_space is not None:
+            out["kernels"] = {k: list(v)
+                              for k, v in self.kernel_space.items()}
+        return out
+
+    def __iter__(self):
+        # the pre-SweepSpec loader returned a positional 4-tuple; keep
+        # unpacking working for one release
+        import warnings
+        warnings.warn(
+            "unpacking a SweepSpec as the legacy (providers, clause_space"
+            ", global_space, mesh_space) 4-tuple is deprecated; use the "
+            "named fields or ComParTuner.sweep(spec=...)",
+            DeprecationWarning, stacklevel=2)
+        yield list(self.providers)
+        yield self.clauses
+        yield self.globals
+        yield list(self.meshes) if self.meshes is not None else None
+
+
+def load_sweep_json(path: str) -> SweepSpec:
     """ComPar-style JSON sweep input.
 
     {
       "providers": {"tensor_par": ["shard_vocab"], "fsdp": []},
       "clauses":   {"remat": ["none","dots"], "kernel": ["xla"]},
       "globals":   {"microbatches": [1,2]},
-      "meshes":    [null, {"data": 2, "model": 2}]
+      "meshes":    [null, {"data": 2, "model": 2}],
+      "kernels":   {"kernel": ["xla","pallas"], "block_k": [512, 1024]}
     }
 
     ``meshes`` is the topology axis: a list of mesh points passed to
@@ -268,19 +342,12 @@ def load_sweep_json(path: str):
     an object is either the ``{"axis": size, ...}`` shorthand or the
     full MeshSpec wire form (``{"axes": [["data", 2]], "device_kind":
     "cpu"}``).  Absent = the mesh is not swept (``mesh_space=None``).
+    ``kernels`` is the inner kernel-schedule grid
+    (``sweep(kernel_space=...)``); absent = no inner sweep.
 
-    Returns ``(providers, clause_space, global_space, mesh_space)``.
+    Returns a :class:`SweepSpec` for ``sweep(spec=...)``.  Unpacking the
+    result as the legacy ``(providers, clause_space, global_space,
+    mesh_space)`` 4-tuple still works, with a DeprecationWarning.
     """
-    from repro.core.meshspec import as_mesh_point
     with open(path) as f:
-        spec = json.load(f)
-    providers = list(spec.get("providers", {}))
-    clause_space = {k: tuple(v) for k, v in spec.get("clauses", {}).items()}
-    for k, v in DEFAULT_CLAUSE_SPACE.items():
-        clause_space.setdefault(k, (v[0],))
-    global_space = {k: tuple(v) for k, v in spec.get("globals", {}).items()}
-    for k, v in DEFAULT_GLOBAL_SPACE.items():
-        global_space.setdefault(k, (v[0],))
-    mesh_space = [as_mesh_point(m) for m in spec["meshes"]] \
-        if "meshes" in spec else None
-    return providers, clause_space, global_space, mesh_space
+        return SweepSpec.from_json(json.load(f))

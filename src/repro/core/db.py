@@ -62,6 +62,20 @@ CREATE TABLE IF NOT EXISTS kernel_cache (
     created REAL,
     PRIMARY KEY (key, variant)
 );
+CREATE TABLE IF NOT EXISTS plan_registry (
+    arch TEXT,                       -- ArchConfig name
+    shape TEXT,                      -- shape_key(): kind:seq_lenxbatch
+    kind TEXT,                       -- shape kind (nearest-lookup filter)
+    seq_len INTEGER,
+    batch INTEGER,
+    mesh TEXT,                       -- MeshSpec mid ('local' = no mesh)
+    cache_tag TEXT,                  -- executor tag the plan was scored under
+    plan TEXT,                       -- Plan.to_json blob
+    total_s REAL,                    -- fused predicted total (argmin value)
+    report TEXT,                     -- sweep report summary JSON
+    created REAL,
+    PRIMARY KEY (arch, shape, mesh, cache_tag)
+);
 """
 
 
@@ -330,6 +344,53 @@ class SweepDB:
               float(e.get("flops") or 0.0), e.get("error", ""), now)
              for variant, e in entries.items()])
         self.conn.commit()
+
+    # --- registered fused plans (the serving side's lookup table) -----------
+    _PLAN_COLS = ("arch", "shape", "kind", "seq_len", "batch", "mesh",
+                  "cache_tag", "plan", "total_s", "report", "created")
+
+    def plan_put(self, row: Dict):
+        """Register a fused plan under its deployment key ``(arch, shape,
+        mesh, cache_tag)``.  INSERT OR REPLACE: a re-tuned plan for the
+        same key supersedes the old one (newest-wins, like machine_put —
+        the sweep that just ran has the freshest view of the hardware).
+        """
+        self.conn.execute(
+            "INSERT OR REPLACE INTO plan_registry VALUES "
+            "(?,?,?,?,?,?,?,?,?,?,?)",
+            (row["arch"], row["shape"], row["kind"], int(row["seq_len"]),
+             int(row["batch"]), row["mesh"], row.get("cache_tag", ""),
+             row["plan"], row.get("total_s"), row.get("report", ""),
+             time.time()))
+        self.conn.commit()
+
+    def plan_get(self, arch: str, shape: str, mesh: str,
+                 cache_tag: str) -> Optional[Dict]:
+        cur = self.conn.execute(
+            "SELECT %s FROM plan_registry WHERE arch=? AND shape=? AND "
+            "mesh=? AND cache_tag=?" % ", ".join(self._PLAN_COLS),
+            (arch, shape, mesh, cache_tag))
+        row = cur.fetchone()
+        return dict(zip(self._PLAN_COLS, row)) if row else None
+
+    def plan_query(self, arch: Optional[str] = None,
+                   kind: Optional[str] = None, mesh: Optional[str] = None,
+                   cache_tag: Optional[str] = None) -> List[Dict]:
+        """Registered plans matching every given filter, in a
+        deterministic order (the registry's nearest-shape fallback
+        tie-breaks on it)."""
+        clauses, args = [], []
+        for col, val in (("arch", arch), ("kind", kind), ("mesh", mesh),
+                         ("cache_tag", cache_tag)):
+            if val is not None:
+                clauses.append(f"{col}=?")
+                args.append(val)
+        q = "SELECT %s FROM plan_registry" % ", ".join(self._PLAN_COLS)
+        if clauses:
+            q += " WHERE " + " AND ".join(clauses)
+        q += " ORDER BY arch, shape, mesh, cache_tag"
+        return [dict(zip(self._PLAN_COLS, r))
+                for r in self.conn.execute(q, args)]
 
     def cache_size(self) -> int:
         return self.conn.execute(

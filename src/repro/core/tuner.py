@@ -36,7 +36,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.backends import Recorder, Scheduler, make_backend
-from repro.core.combinator import (Combination, GlobalKnobs,
+from repro.core.combinator import (Combination, GlobalKnobs, SweepSpec,
                                    enumerate_combinations, global_grid,
                                    paper_combination_count, row_cid,
                                    swept_knob_fields)
@@ -142,11 +142,53 @@ class SweepReport:
         return s
 
 
+@dataclass(frozen=True)
+class BackendOptions:
+    """``sweep()``'s scoring-backend kwargs as one typed value.
+
+    ``sweep(backend=BackendOptions(...))`` — the bare kwargs
+    (``workers=``, ``remote_url=``, ...) still work and mean exactly the
+    same thing; passing a bundle AND a non-default bare kwarg of the
+    same group is a ValueError, never a silent override."""
+    backend: str = "thread"
+    workers: int = 1
+    remote_url: Optional[str] = None
+    remote_token: Optional[str] = None
+    fallback: Optional[str] = None
+    retry: Optional[object] = None          # backends.RetryPolicy
+    transient_retries: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class SearchOptions:
+    """``sweep()``'s search-strategy kwargs as one typed value
+    (``sweep(search=SearchOptions(...))``); same conflict contract as
+    :class:`BackendOptions`."""
+    prune: bool = False
+    prune_margin: float = 0.1
+    static_checks: str = "warn"
+    kernel_space: Optional[object] = None   # "auto" | {field: values}
+    kernel_top_k: int = 2
+    use_cache: bool = True
+    share_scores: bool = True
+    record_batch: int = 64
+
+
+def _unbundle(bundle, bare: Dict[str, Tuple], kind: str) -> List:
+    """Explode a kwarg bundle, refusing non-default bare twins."""
+    clash = [k for k, (v, d) in bare.items() if v is not d and v != d]
+    if clash:
+        raise ValueError(
+            f"{kind} conflicts with bare kwarg(s) {sorted(clash)}: pass "
+            f"the value inside the bundle or drop the bundle")
+    return [getattr(bundle, f) for f in bundle.__dataclass_fields__]
+
+
 class ComParTuner:
     def __init__(self, cfg: ArchConfig, shape: ShapeConfig, mesh=None, *,
                  db: Optional[SweepDB] = None, project: Optional[str] = None,
                  mode: str = "new", executor: str = "dryrun",
-                 machine=None,
+                 machine=None, registry=None,
                  validate: bool = False, timeout_s: Optional[int] = 300):
         self.cfg = cfg
         self.shape = shape
@@ -179,6 +221,22 @@ class ComParTuner:
             self.executor = WallClockExecutor(self.mesh, timeout_s=timeout_s)
         else:
             raise ValueError(executor)
+        # ``registry``: where the fused plan of every ``sweep()`` is
+        # persisted for the serving side (repro.serve) — None (off),
+        # True (a PlanRegistry in THIS tuner's DB: plans beside the
+        # scores that produced them), a PlanRegistry, or a DB path.
+        self.registry = None
+        if registry is not None and registry is not False:
+            from repro.serve.registry import PlanRegistry
+            if registry is True:
+                self.registry = PlanRegistry(self.db)
+            elif hasattr(registry, "register") and hasattr(registry,
+                                                           "lookup"):
+                # duck-typed, not isinstance: `python -m` runs modules
+                # under __main__, which forks the class object
+                self.registry = registry
+            else:
+                self.registry = PlanRegistry(registry)
         self.validate = validate
         #: cached ScoringBackends (warm process pools) — see _engine()
         self._engines: Dict[Tuple, object] = {}
@@ -189,13 +247,16 @@ class ComParTuner:
 
     # ------------------------------------------------------------------
     def sweep(self, providers: Optional[Sequence[str]] = None,
-              clause_space=None, *, budget: Optional[int] = None,
+              clause_space=None, *,
+              spec: Optional[SweepSpec] = None,
+              budget: Optional[int] = None,
               knobs: GlobalKnobs = GlobalKnobs(),
               global_space: Optional[Dict[str, Tuple]] = None,
               mesh_space: Optional[Sequence] = None,
               boundary_costs: bool = False,
               max_flags: Optional[int] = None,
-              backend: str = "thread",
+              backend="thread",
+              search: Optional[SearchOptions] = None,
               workers: int = 1,
               remote_url: Optional[str] = None,
               remote_token: Optional[str] = None,
@@ -209,6 +270,22 @@ class ComParTuner:
               record_batch: int = 64) -> Tuple[Plan, SweepReport]:
         """Run the sweep.  Engine knobs (see docs/sweep_engine.md):
 
+        ``spec``          a :class:`~repro.core.combinator.SweepSpec`
+                          carrying the whole search space (providers +
+                          clause/global/mesh/kernel axes) as one typed
+                          value — what :func:`load_sweep_json` returns.
+                          Conflicts with the bare axis kwargs it covers
+                          (``providers``/``clause_space``/
+                          ``global_space``/``mesh_space``/
+                          ``kernel_space``): passing both is a
+                          ValueError.
+        ``search``        a :class:`SearchOptions` bundling the
+                          search-strategy kwargs (prune/static_checks/
+                          kernel axis/cache policy); ``backend`` also
+                          accepts a :class:`BackendOptions` bundling the
+                          scoring-backend kwargs.  Bare kwargs still
+                          work and are normalized to the same values —
+                          a bundle plus a non-default bare twin raises.
         ``global_space``  GlobalKnobs grid to sweep as the outer axis
                           (the paper's RTL-routine dimension), e.g.
                           ``{"microbatches": (1, 2)}`` — unlisted fields
@@ -295,6 +372,55 @@ class ComParTuner:
         ``record_batch``  DB rows per write transaction
         """
         t0 = time.time()
+        # normalize the typed kwarg bundles first (backend, then search,
+        # then spec), so a spec/bundle field colliding with a bare kwarg
+        # is caught no matter which side carried it
+        if isinstance(backend, BackendOptions):
+            (backend, workers, remote_url, remote_token, fallback, retry,
+             transient_retries) = _unbundle(
+                backend,
+                {"workers": (workers, 1), "remote_url": (remote_url, None),
+                 "remote_token": (remote_token, None),
+                 "fallback": (fallback, None), "retry": (retry, None),
+                 "transient_retries": (transient_retries, None)},
+                "BackendOptions")
+        if search is not None:
+            if not isinstance(search, SearchOptions):
+                raise ValueError(f"search= takes a SearchOptions, got "
+                                 f"{type(search).__name__}")
+            (prune, prune_margin, static_checks, kernel_space,
+             kernel_top_k, use_cache, share_scores, record_batch) = \
+                _unbundle(
+                    search,
+                    {"prune": (prune, False),
+                     "prune_margin": (prune_margin, 0.1),
+                     "static_checks": (static_checks, "warn"),
+                     "kernel_space": (kernel_space, None),
+                     "kernel_top_k": (kernel_top_k, 2),
+                     "use_cache": (use_cache, True),
+                     "share_scores": (share_scores, True),
+                     "record_batch": (record_batch, 64)},
+                    "SearchOptions")
+        if spec is not None:
+            if not isinstance(spec, SweepSpec):
+                raise ValueError(f"spec= takes a SweepSpec, got "
+                                 f"{type(spec).__name__}")
+            clash = [k for k, v in
+                     {"providers": providers, "clause_space": clause_space,
+                      "global_space": global_space,
+                      "mesh_space": mesh_space,
+                      "kernel_space": kernel_space}.items()
+                     if v is not None]
+            if clash:
+                raise ValueError(
+                    f"spec= conflicts with bare kwarg(s) {sorted(clash)}: "
+                    f"the SweepSpec already carries those axes")
+            providers = list(spec.providers) or None
+            clause_space = spec.clauses
+            global_space = spec.globals
+            mesh_space = list(spec.meshes) if spec.meshes is not None \
+                else None
+            kernel_space = spec.kernel_space
         points = global_grid(global_space) if global_space is not None \
             else [knobs]
         if isinstance(mesh_space, str):
@@ -471,6 +597,13 @@ class ComParTuner:
         plan.meta["project"] = self.project
         rep.per_knob_total_s = dict(plan.meta["per_knob_total_s"])
         rep.elapsed_s = time.time() - t0
+        if self.registry is not None:
+            # plans are keyed by what they were tuned FOR: the plan's
+            # chosen mesh when the mesh was swept, the fixed one else
+            self.registry.register(
+                self.cfg, self.shape, plan, report=rep,
+                mesh=plan.mesh if plan.mesh is not None else self.mesh,
+                cache_tag=self.executor.cache_tag)
         log.info(rep.summary())
         return plan, rep
 

@@ -1,64 +1,102 @@
-"""Serving driver: batched greedy decoding with a KV cache / recurrent
-state under a ComParX plan (CPU-runnable with --smoke).
+"""Serving driver: continuous-batching greedy decoding under a ComParX
+plan (CPU-runnable with --smoke).
+
+Thin CLI over :class:`repro.serve.engine.ServeEngine` and
+:class:`repro.serve.registry.PlanRegistry`.  The plan resolves in order:
+``--plan`` file > ``--registry-db`` lookup (keyed by the *actual*
+``--batch``/``--cache-len`` serving shape, nearest-traffic-shape
+fallback) > the built-in default plan.
 
 Usage:
   python -m repro.launch.serve --arch granite-8b --smoke --tokens 32
+  python -m repro.launch.serve --arch stablelm-3b --smoke --batch 4 \\
+      --cache-len 64 --registry-db /tmp/registry.db --requests 6
 """
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import get_arch, get_shape
+from repro.configs import get_arch
 from repro.core.plan import Plan
-from repro.launch.dryrun import default_plan
-from repro.models.model import init_cache, model_specs
-from repro.models.params import init_params
-from repro.serve.step import make_decode_step
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.registry import PlanRegistry, serving_shape
+
+
+def synthetic_requests(n: int, vocab: int, *, prompt_len: int,
+                       tokens: int, seed: int):
+    """Deterministic seeded request stream (varying prompts/lengths)."""
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        p = max(1, prompt_len + int(rng.randint(-1, 2)))
+        prompt = tuple(int(t) for t in rng.randint(0, vocab, size=p))
+        reqs.append(Request(rid=f"r{i}", prompt=prompt,
+                            max_new_tokens=tokens))
+    return reqs
+
+
+def resolve_plan(cfg, shape, *, plan_path=None, registry_db=None):
+    """--plan file > registry lookup (nearest shape) > default plan."""
+    if plan_path:
+        return Plan.load(plan_path), f"file:{plan_path}"
+    if registry_db:
+        entry = PlanRegistry(registry_db).lookup(cfg, shape)
+        if entry is None:
+            raise SystemExit(
+                f"[serve] no plan registered for {cfg.name} "
+                f"{shape.kind}:{shape.seq_len}x{shape.global_batch} in "
+                f"{registry_db} — run a sweep with registry= first "
+                f"(python -m repro.serve.registry)")
+        src = "registry" if entry.exact else f"registry~{entry.shape}"
+        return entry.plan, src
+    from repro.launch.dryrun import default_plan
+    return default_plan(cfg, shape), "default"
 
 
 def serve(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(prog="python -m repro.launch.serve")
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="slot capacity (the compiled batch)")
+    ap.add_argument("--tokens", type=int, default=32,
+                    help="max new tokens per request")
     ap.add_argument("--cache-len", type=int, default=128)
-    ap.add_argument("--plan", default=None)
+    ap.add_argument("--plan", default=None, help="plan JSON file")
+    ap.add_argument("--registry-db", default=None,
+                    help="resolve the plan from this PlanRegistry DB")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=4)
+    ap.add_argument("--max-active", type=int, default=None,
+                    help="admission throttle (1 = sequential baseline)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
-    shape = get_shape("decode_32k").smoke()
-    plan = Plan.load(args.plan) if args.plan else default_plan(cfg, shape)
+    # the serving shape IS the CLI's deployment: --cache-len x --batch
+    shape = serving_shape(args.batch, args.cache_len)
+    plan, src = resolve_plan(cfg, shape, plan_path=args.plan,
+                             registry_db=args.registry_db)
     print(f"[serve] arch={cfg.name} batch={args.batch} "
-          f"cache={args.cache_len}")
+          f"cache={args.cache_len} plan={src}")
 
-    params = init_params(model_specs(cfg), jax.random.key(args.seed))
-    step, _ = make_decode_step(cfg, None, plan)
-    step = jax.jit(step, donate_argnums=(1,))
-    caches = init_cache(cfg, args.batch, args.cache_len)
-    tokens = jnp.zeros((args.batch,), jnp.int32)
-
-    out = []
-    t0 = time.perf_counter()
-    for pos in range(args.tokens):
-        tokens, logits, caches = step(params, caches, tokens,
-                                      jnp.int32(pos))
-        out.append(tokens)
-    jax.block_until_ready(tokens)
-    dt = time.perf_counter() - t0
-    seqs = jnp.stack(out, axis=1)
-    tps = args.batch * args.tokens / dt
-    print(f"[serve] generated {args.tokens} tokens x {args.batch} seqs "
-          f"in {dt:.2f}s ({tps:.1f} tok/s)")
-    print(f"[serve] sample: {seqs[0][:16].tolist()}")
-    return seqs
+    engine = ServeEngine(cfg, plan, capacity=args.batch,
+                         cache_len=args.cache_len, seed=args.seed)
+    reqs = synthetic_requests(args.requests, cfg.vocab_size,
+                              prompt_len=args.prompt_len,
+                              tokens=args.tokens, seed=args.seed)
+    done = engine.run(reqs, max_active=args.max_active)
+    for r in reqs:
+        c = done[r.rid]
+        print(f"[serve] {r.rid}: prompt={c.prompt_len} "
+              f"-> {len(c.tokens)} tokens ({c.finish_reason}) "
+              f"{c.tokens[:8]}{'...' if len(c.tokens) > 8 else ''}")
+    print(f"[serve] {engine.stats.summary()}")
+    return done
 
 
 if __name__ == "__main__":

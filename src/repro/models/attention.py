@@ -100,7 +100,9 @@ def decode_attention(q1, k_cache, v_cache, pos, *, window: int = 0,
                      upcast: bool = True):
     """One-token attention against a KV cache.
 
-    q1: (B,H,D); caches: (B,Smax,KV,D); pos: scalar index of the new token.
+    q1: (B,H,D); caches: (B,Smax,KV,D); pos: scalar index of the new
+    token, or a (B,) vector of per-row positions (the serving engine's
+    continuous batching — each slot decodes its own stream).
     Reads the full cache (memory-roofline bound); the Pallas flash-decode
     kernel implements the same contraction blocked over Smax.
 
@@ -121,10 +123,19 @@ def decode_attention(q1, k_cache, v_cache, pos, *, window: int = 0,
                        preferred_element_type=jnp.float32)
     s = s * (D ** -0.5)
     ks = jnp.arange(Smax)
-    m = ks <= pos
-    if window:
-        m &= ks > pos - window
-    s = jnp.where(m[None, None, None], s, NEG_INF)
+    if jnp.ndim(pos) == 0:
+        m = ks <= pos
+        if window:
+            m &= ks > pos - window
+        m = m[None, None, None]
+    else:
+        # per-row positions (continuous batching): row b masks against
+        # its own pos, so its output depends on row b's inputs alone
+        m = ks[None, :] <= pos[:, None]                 # (B,Smax)
+        if window:
+            m &= ks[None, :] > pos[:, None] - window
+        m = m[:, None, None, :]
+    s = jnp.where(m, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     if upcast:
         o = jnp.einsum("bkgs,bskd->bkgd", p,
@@ -256,23 +267,40 @@ def attn_decode_shardmap(q, k, v, cache, pos, ctx: ModelContext):
 
 
 def attn_decode(p, x1, cache, pos, cfg: ArchConfig, ctx: ModelContext):
-    """One-token decode. x1: (B,d_model); cache: {"k","v"} (B,Smax,KV,D)."""
+    """One-token decode. x1: (B,d_model); cache: {"k","v"} (B,Smax,KV,D).
+
+    ``pos`` is a scalar (the classic batched loop: every row at the same
+    position) or a ``(B,)`` vector of per-row positions (continuous
+    batching).  The vector path writes the cache with a per-row one-hot
+    select and masks per row, so row ``b`` of every output is a function
+    of row ``b``'s inputs alone — the serving engine's byte-identity
+    contract.  The pallas flash-decode and shard_map kernels take a
+    single scalar position, so vector-pos calls use the XLA path.
+    """
     q = dense(x1, p["wq"])                             # (B,H,D)
     k = dense(x1, p["wk"])                             # (B,KV,D)
     v = dense(x1, p["wv"])
     q = apply_rope(q, pos, cfg.rope)
     k = apply_rope(k, pos, cfg.rope)
-    if (ctx.clause.decode_shardmap and not cfg.window_size
-            and _seq_sharded(ctx, cache)):
+    vector_pos = jnp.ndim(pos) > 0
+    if (not vector_pos and ctx.clause.decode_shardmap
+            and not cfg.window_size and _seq_sharded(ctx, cache)):
         o, new_cache = attn_decode_shardmap(q, k, v, cache, pos, ctx)
         y = jnp.einsum("bhd,hde->be", o, p["wo"]).astype(x1.dtype)
         return ctx.constrain(y, ("batch", "embed")), new_cache
     cache_len = cache["k"].shape[1]
     slot = pos % cache_len if cfg.window_size else pos  # ring buffer if windowed
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k[:, None], slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v[:, None], slot, axis=1)
+    if vector_pos:
+        # per-row write: a dynamic_update_slice needs one shared scalar
+        # slot, so select row b's slot with a one-hot mask instead
+        hit = jnp.arange(cache_len)[None, :] == slot[:, None]   # (B,Smax)
+        k_cache = jnp.where(hit[:, :, None, None], k[:, None], cache["k"])
+        v_cache = jnp.where(hit[:, :, None, None], v[:, None], cache["v"])
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k[:, None], slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v[:, None], slot, axis=1)
     k_cache = ctx.constrain(k_cache, ("batch", "kv_seq", "kv_heads", None))
     v_cache = ctx.constrain(v_cache, ("batch", "kv_seq", "kv_heads", None))
     if cfg.window_size:
@@ -280,7 +308,7 @@ def attn_decode(p, x1, cache, pos, cfg: ArchConfig, ctx: ModelContext):
         o = decode_attention(q, k_cache, v_cache,
                              jnp.minimum(pos, cache_len - 1), window=0,
                              upcast=ctx.clause.cache_upcast)
-    elif ctx.clause.kernel == "pallas":
+    elif ctx.clause.kernel == "pallas" and not vector_pos:
         from repro import kernels as kops
         o = kops.flash_decode(q, k_cache, v_cache, pos,
                               block_k=ctx.clause.block_k,

@@ -1,0 +1,18 @@
+"""Serving subsystem: the side of ComParX that *consumes* fused plans.
+
+``repro.serve.step`` builds the prefill/decode step functions under a
+plan; ``repro.serve.registry`` persists fused plans keyed by deployment
+context (the PlanRegistry ``ComParTuner`` registers into after fusion);
+``repro.serve.engine`` is the continuous-batching decode engine that
+serves overlapping requests from one fixed-capacity batched program.
+See docs/serving.md.
+"""
+from repro.serve.engine import (  # noqa: F401
+    Completion, Request, ServeEngine, ServeStats,
+)
+from repro.serve.registry import (  # noqa: F401
+    PlanRegistry, RegistryEntry, serving_shape,
+)
+from repro.serve.step import (  # noqa: F401
+    make_decode_step, make_prefill, make_prefill_cache,
+)

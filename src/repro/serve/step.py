@@ -108,6 +108,43 @@ def make_prefill(cfg: ArchConfig, mesh, plan: Plan, *,
     return prefill, {"params": param_shardings(cfg, mesh, plan)}
 
 
+def make_prefill_cache(cfg: ArchConfig, mesh, plan: Plan, *,
+                       interpret: bool = True):
+    """The serving engine's prefill segment: consume a prompt into a
+    decode cache.
+
+    :func:`make_prefill` computes full-sequence prompt logits but
+    produces no KV/recurrent state, so request admission scans the
+    plan's decode step across the prompt positions instead — one
+    program per prompt length whose last-position logits match the
+    full-sequence forward's (cross-validated in tests/test_serve.py)
+    and whose output caches are exactly the state a token-by-token
+    decode loop would leave behind.
+
+    Returns ``prefill(params, caches, prompt) -> (first_tokens (B,),
+    last_logits (B,V) f32, new_caches)`` where ``prompt`` is (B, P)
+    int32 and ``caches`` a fresh ``init_cache`` pytree.
+    """
+    ctxs = build_contexts(cfg, mesh, plan, interpret=interpret)
+
+    def prefill(params, caches, prompt):
+        P = prompt.shape[1]
+
+        def body(caches, i):
+            tok = jax.lax.dynamic_index_in_dim(prompt, i, axis=1,
+                                               keepdims=False)
+            logits, caches = decode_step(params, caches, tok, i, cfg, ctxs)
+            return caches, logits
+
+        caches, logits = jax.lax.scan(
+            body, caches, jnp.arange(P, dtype=jnp.int32))
+        last = logits[-1]
+        nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        return nxt, last, caches
+
+    return prefill
+
+
 def prefill_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict:
     B, S = shape.global_batch, shape.seq_len
     i32 = jnp.dtype("int32")

@@ -1,0 +1,148 @@
+"""The typed sweep API: SweepSpec, BackendOptions/SearchOptions bundles,
+and the guarantee that every spelling of the same sweep produces the
+same plan and the same accounting."""
+import json
+
+import pytest
+
+from repro.configs import get_arch, get_shape
+from repro.core import (BackendOptions, ComParTuner, SearchOptions,
+                        SweepDB, SweepSpec, load_sweep_json)
+
+SPEC_JSON = {
+    "providers": {"tensor_par": ["shard_vocab"], "fsdp": []},
+    "clauses": {"remat": ["none", "dots"], "block_q": [16]},
+    "globals": {"microbatches": [1, 2]},
+}
+
+
+@pytest.fixture()
+def spec_path(tmp_path):
+    p = tmp_path / "spec.json"
+    p.write_text(json.dumps(SPEC_JSON))
+    return str(p)
+
+
+def _tuner(tmp_path, name):
+    cfg = get_arch("stablelm-3b").smoke()
+    shape = get_shape("train_4k").smoke()
+    db = SweepDB(str(tmp_path / f"{name}.db"))
+    return ComParTuner(cfg, shape, db=db, project=name,
+                       executor="dryrun")
+
+
+def _plan_key(plan):
+    # identical modulo bookkeeping: meta carries the project name
+    doc = {k: v for k, v in plan.to_json().items() if k != "meta"}
+    return json.dumps(doc, sort_keys=True)
+
+
+def _accounting(rep):
+    return (rep.n_combinations, rep.n_done, rep.n_failed, rep.n_pruned,
+            rep.n_scored, rep.n_cached, rep.n_shared, rep.n_knob_points,
+            rep.n_mesh_points)
+
+
+# --- SweepSpec --------------------------------------------------------------
+
+def test_load_sweep_json_returns_typed_spec(spec_path):
+    spec = load_sweep_json(spec_path)
+    assert isinstance(spec, SweepSpec)
+    assert spec.providers == ("tensor_par", "fsdp")
+    assert spec.clauses["remat"] == ("none", "dots")
+    assert spec.globals["microbatches"] == (1, 2)
+    assert spec.meshes is None and spec.kernel_space is None
+
+
+def test_spec_tuple_unpacking_shim_warns(spec_path):
+    spec = load_sweep_json(spec_path)
+    with pytest.warns(DeprecationWarning, match="4-tuple"):
+        providers, clause_space, global_space, mesh_space = spec
+    assert providers == ["tensor_par", "fsdp"]
+    assert clause_space == spec.clauses
+    assert global_space == spec.globals
+    assert mesh_space is None
+
+
+def test_spec_json_roundtrip(spec_path):
+    spec = load_sweep_json(spec_path)
+    again = SweepSpec.from_json(spec.to_json())
+    assert again == spec
+    # the mesh axis survives the round-trip as MeshSpecs
+    doc = dict(SPEC_JSON, meshes=[None, {"data": 2}])
+    s2 = SweepSpec.from_json(doc)
+    assert s2.meshes is not None and len(s2.meshes) == 2
+    assert SweepSpec.from_json(s2.to_json()) == s2
+
+
+def test_sweep_spec_equals_bare_kwargs(tmp_path, spec_path):
+    spec = load_sweep_json(spec_path)
+    with _tuner(tmp_path, "via-spec") as t1:
+        p1, r1 = t1.sweep(spec=spec, max_flags=1, backend="sequential")
+    with _tuner(tmp_path, "via-kwargs") as t2:
+        p2, r2 = t2.sweep(providers=list(spec.providers),
+                          clause_space=spec.clauses,
+                          global_space=spec.globals,
+                          max_flags=1, backend="sequential")
+    assert _plan_key(p1) == _plan_key(p2)
+    assert _accounting(r1) == _accounting(r2)
+
+
+def test_spec_conflicts_with_bare_axis_kwargs(tmp_path, spec_path):
+    spec = load_sweep_json(spec_path)
+    with _tuner(tmp_path, "conflict") as t:
+        with pytest.raises(ValueError, match="providers"):
+            t.sweep(providers=["fsdp"], spec=spec)
+        with pytest.raises(ValueError, match="clause_space"):
+            t.sweep(clause_space={"remat": ("none",)}, spec=spec)
+        with pytest.raises(ValueError, match="global_space"):
+            t.sweep(spec=spec, global_space={"microbatches": (1,)})
+        with pytest.raises(ValueError, match="SweepSpec"):
+            t.sweep(spec=("tensor_par",))
+
+
+# --- kwarg bundles ----------------------------------------------------------
+
+def test_backend_and_search_bundles_equal_bare_kwargs(tmp_path):
+    kw = dict(providers=("tensor_par",),
+              clause_space={"remat": ("none", "dots"), "kernel": ("xla",)},
+              max_flags=0)
+    with _tuner(tmp_path, "bare") as t1:
+        p1, r1 = t1.sweep(backend="sequential", prune=True,
+                          prune_margin=0.0, static_checks="strict", **kw)
+    with _tuner(tmp_path, "bundled") as t2:
+        p2, r2 = t2.sweep(
+            backend=BackendOptions(backend="sequential"),
+            search=SearchOptions(prune=True, prune_margin=0.0,
+                                 static_checks="strict"), **kw)
+    assert _plan_key(p1) == _plan_key(p2)
+    assert _accounting(r1) == _accounting(r2)
+    assert r1.static_rules == r2.static_rules
+
+
+def test_bundle_conflicts_with_bare_twin(tmp_path):
+    kw = dict(providers=("tensor_par",),
+              clause_space={"remat": ("none",)}, max_flags=0)
+    with _tuner(tmp_path, "clash") as t:
+        with pytest.raises(ValueError, match="workers"):
+            t.sweep(backend=BackendOptions(backend="thread", workers=2),
+                    workers=3, **kw)
+        with pytest.raises(ValueError, match="prune"):
+            t.sweep(search=SearchOptions(prune=True), prune=True, **kw)
+        with pytest.raises(ValueError, match="SearchOptions"):
+            t.sweep(search={"prune": True}, **kw)
+    # defaults inside the bundle never clash with default bare kwargs
+    with _tuner(tmp_path, "noclash") as t:
+        t.sweep(backend=BackendOptions(backend="sequential"),
+                search=SearchOptions(), **kw)
+
+
+def test_search_bundle_conflict_detected_against_spec(tmp_path, spec_path):
+    # kernel_space arriving via SearchOptions collides with a spec that
+    # would also set it — normalization order must catch it
+    spec = load_sweep_json(spec_path)
+    with _tuner(tmp_path, "order") as t:
+        with pytest.raises(ValueError, match="kernel_space"):
+            t.sweep(spec=spec,
+                    search=SearchOptions(
+                        kernel_space={"kernel": ("xla",)}))

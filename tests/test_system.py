@@ -23,10 +23,14 @@ def test_train_launcher_end_to_end(tmp_path):
 
 def test_serve_launcher_end_to_end():
     from repro.launch.serve import serve
-    seqs = serve(["--arch", "xlstm-125m", "--smoke", "--batch", "2",
-                  "--tokens", "8", "--cache-len", "16"])
-    assert seqs.shape == (2, 8)
-    assert int(seqs.max()) < get_arch("xlstm-125m").smoke().vocab_size
+    done = serve(["--arch", "xlstm-125m", "--smoke", "--batch", "2",
+                  "--tokens", "8", "--cache-len", "16", "--requests", "3",
+                  "--prompt-len", "2"])
+    vocab = get_arch("xlstm-125m").smoke().vocab_size
+    assert len(done) == 3
+    for c in done.values():
+        assert len(c.tokens) == 8 and c.finish_reason == "length"
+        assert max(c.tokens) < vocab
 
 
 def test_dryrun_input_specs_cover_all_cells():
